@@ -1,0 +1,45 @@
+"""Fig 3(a): effect of k (n fixed at 10) on deduplication ratio.
+
+Paper claim: each chunk costs n/k of its size after coding, so the
+dedup ratio (original bytes / consumed bytes, indexing included) rises
+monotonically with k; CLB > ULB at every k.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import ingest, make_store
+from repro.core.workload import WorkloadConfig
+
+KS = (2, 3, 4, 5, 6, 7, 8, 10)
+
+
+def run(quick: bool = True) -> list[dict]:
+    cfg = WorkloadConfig(scale=(1 / 120_000 if quick else 1 / 40_000),
+                         n_days=5 if quick else 21)
+    rows = []
+    for scheme in ("clb", "ulb"):
+        for k in KS:
+            store = make_store(scheme, n=10, k=k)
+            ingest(store, cfg, snapshot_days=(), keep_events=False)
+            st = store.stats()
+            rows.append({"name": f"fig3a/{scheme}/k={k}", "k": k,
+                         "scheme": scheme,
+                         "dedup_ratio": round(st.dedup_ratio, 4),
+                         "logical_mb": round(st.logical_bytes / 2**20, 2),
+                         "consumed_mb": round(st.consumed_bytes / 2**20, 2)})
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    """Paper-claim assertions; returns failure strings."""
+    fails = []
+    for scheme in ("clb", "ulb"):
+        seq = [r["dedup_ratio"] for r in rows if r["scheme"] == scheme]
+        if not all(a < b for a, b in zip(seq, seq[1:])):
+            fails.append(f"fig3a: {scheme} dedup ratio not increasing in k")
+    for k in KS:
+        clb = next(r for r in rows if r["name"] == f"fig3a/clb/k={k}")
+        ulb = next(r for r in rows if r["name"] == f"fig3a/ulb/k={k}")
+        if clb["dedup_ratio"] <= ulb["dedup_ratio"]:
+            fails.append(f"fig3a: CLB <= ULB at k={k}")
+    return fails

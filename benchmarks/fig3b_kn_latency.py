@@ -1,0 +1,53 @@
+"""Fig 3(b): effect of k (n=10) on file retrieval time (3 MB file).
+
+Paper claims: retrieval time is U-shaped in k -- small k wastes bandwidth
+(each connection carries size/k but there are only k useful streams),
+large k waits on deeper order statistics and a heavier decode; the
+minimum sits at k=5 for their setup.  ULB < CLB at fixed k.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import calibrated_params
+from repro.core.latency import expected_retrieval_time
+
+KS = (1, 2, 3, 4, 5, 6, 7, 8, 9, 10)
+FILE = 3 * 2**20
+
+
+def run(quick: bool = True) -> list[dict]:
+    params = calibrated_params()
+    samples = 64 if quick else 256
+    rows = []
+    for k in KS:
+        rng = np.random.default_rng(42)
+        t_ulb = expected_retrieval_time(FILE, 10, k, params, rng,
+                                        n_clusters=1, samples=samples)
+        rng = np.random.default_rng(42)
+        # CLB spreads a file's chunks over many clusters; meta lookups and
+        # connection fan-out across ~8 clusters (measured in fig3d ingest)
+        t_clb = expected_retrieval_time(FILE, 10, k, params, rng,
+                                        n_clusters=8, rho=0.15,
+                                        samples=samples)
+        rows.append({"name": f"fig3b/k={k}", "k": k,
+                     "ulb_time_s": round(t_ulb, 3),
+                     "clb_time_s": round(t_clb, 3)})
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    times = {r["k"]: r["ulb_time_s"] for r in rows}
+    kmin = min(times, key=times.get)
+    if not 4 <= kmin <= 6:
+        fails.append(f"fig3b: ULB optimum at k={kmin}, paper says ~5")
+    if not times[1] > times[5]:
+        fails.append("fig3b: k=1 should be slower than k=5")
+    if not times[10] > times[5]:
+        fails.append("fig3b: k=10 should be slower than k=5")
+    for r in rows:
+        if r["k"] >= 2 and r["ulb_time_s"] >= r["clb_time_s"]:
+            fails.append(f"fig3b: ULB >= CLB at k={r['k']}")
+    return fails

@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks (S II hot loops): RS coding, CDC hash, SHA-1.
+
+This container has no TPU, so the *Pallas* kernels run interpret-mode
+(correctness only, not speed).  The timed paths are (a) the pure-jnp
+reference lowered through XLA-CPU and (b) the host numpy/hashlib
+baselines the paper's EC2 prototype would use -- giving a real, measured
+throughput comparison plus derived bytes/s for the storage pipeline.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.chunking import DEFAULT_CHUNKER, gear_hash_np
+from repro.core.rs_code import RSCode, generator_matrix
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    rng = np.random.RandomState(0)
+
+    # ---- RS encode: (B, k, L) -> (B, n, L) ----
+    B, L = (64, 4096) if quick else (256, 4096)
+    data = rng.randint(0, 256, size=(B, 5, L), dtype=np.uint8)  # noqa: NPY002
+    code = RSCode(10, 5)
+    G = generator_matrix(10, 5)
+    t_np = _time(code.encode, data)
+    t_ref = _time(lambda d: ops.rs_apply(G, d, impl="ref"), data)
+    mb = B * 5 * L / 2**20
+    rows.append({"name": "kernel/rs_encode_numpy",
+                 "us_per_call": round(t_np * 1e6, 1),
+                 "MBps": round(mb / t_np, 1)})
+    rows.append({"name": "kernel/rs_encode_jnp_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "MBps": round(mb / t_ref, 1)})
+
+    # ---- gear CDC hash over a buffer ----
+    N = (4 << 20) if quick else (16 << 20)
+    buf = rng.randint(0, 256, size=N, dtype=np.uint8)  # noqa: NPY002
+    t_np = _time(gear_hash_np, buf)
+    t_ref = _time(lambda b: ops.gear_hash(b, impl="ref"), buf)
+    rows.append({"name": "kernel/gear_hash_numpy",
+                 "us_per_call": round(t_np * 1e6, 1),
+                 "MBps": round(N / 2**20 / t_np, 1)})
+    rows.append({"name": "kernel/gear_hash_jnp_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "MBps": round(N / 2**20 / t_ref, 1)})
+
+    # ---- chunk + hash pipeline (the upload hot path) ----
+    t_pipe = _time(lambda b: [hashing.chunk_id(c)
+                              for c in DEFAULT_CHUNKER.chunk(b.tobytes())],
+                   buf, reps=2)
+    rows.append({"name": "kernel/cdc_sha1_pipeline",
+                 "us_per_call": round(t_pipe * 1e6, 1),
+                 "MBps": round(N / 2**20 / t_pipe, 1)})
+
+    # ---- batched SHA-1 ----
+    chunks = [rng.randint(0, 256, size=4096,  # noqa: NPY002
+                          dtype=np.uint8).tobytes() for _ in range(256)]
+    t_ref = _time(lambda c: ops.sha1_digests(c, impl="ref"), chunks, reps=2)
+    mb = 256 * 4096 / 2**20
+    rows.append({"name": "kernel/sha1_jnp_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "MBps": round(mb / t_ref, 1)})
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        if r["MBps"] <= 0:
+            fails.append(f"{r['name']}: non-positive throughput")
+    return fails

@@ -1,0 +1,57 @@
+"""Roofline report generator: results/dryrun*.json -> markdown table.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.roofline \
+      --in results/dryrun_single.json --md results/roofline.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+COLS = ("arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+        "t_collective_s", "bottleneck", "useful_flops_ratio",
+        "roofline_fraction", "resident_gb_per_chip", "compile_s")
+
+
+def fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", nargs="+",
+                    default=["results/dryrun_single.json"])
+    ap.add_argument("--md", default="results/roofline.md")
+    args = ap.parse_args()
+
+    rows = []
+    failures = []
+    for path in args.inp:
+        with open(path) as f:
+            data = json.load(f)
+        rows += data.get("results", [])
+        failures += data.get("failures", [])
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    lines = ["| " + " | ".join(COLS) + " |",
+             "|" + "---|" * len(COLS)]
+    for r in rows:
+        lines.append("| " + " | ".join(fmt(r.get(c, "")) for c in COLS)
+                     + " |")
+    if failures:
+        lines.append("\n**Failures:**\n")
+        for f_ in failures:
+            lines.append(f"- {f_}")
+    out = "\n".join(lines)
+    with open(args.md, "w") as f:
+        f.write(out + "\n")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

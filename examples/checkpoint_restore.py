@@ -1,0 +1,49 @@
+"""Fault-tolerance drill: checkpoint a model into SEARS, lose storage
+nodes AND add stragglers, then restore bit-exact onto fresh shardings.
+
+Run:  PYTHONPATH=src python examples/checkpoint_restore.py
+"""
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import SEARSCheckpointManager
+from repro.configs.base import get_config
+from repro.models import api
+
+
+def main() -> None:
+    cfg = get_config("granite_moe_1b").reduced()
+    model = api.get_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(42))
+    n_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name}, {n_bytes/2**20:.1f} MiB of parameters")
+
+    mgr = SEARSCheckpointManager(run="drill", node_capacity=4 << 30)
+    stats = mgr.save(100, params)
+    print(f"saved step 100: {stats['bytes']/2**20:.1f} MiB logical, "
+          f"{stats['bytes_after_dedup']/2**20:.1f} MiB uploaded")
+
+    stats = mgr.save(200, params)  # unchanged -> full dedup
+    print(f"saved step 200 (unchanged): {stats['bytes_after_dedup']} bytes "
+          f"uploaded ({stats['dedup_saving']:.0%} dedup saving)")
+
+    # catastrophe: every cluster loses 5 of 10 nodes (= n-k budget),
+    # and two survivors become 10x stragglers
+    for c in mgr.store.clusters:
+        c.kill_nodes([0, 2, 4, 6, 8])
+        c.set_stragglers([1, 3], 10.0)
+    print("killed 5/10 nodes per cluster + 2 stragglers")
+
+    restored = mgr.restore(jax.eval_shape(lambda: params))
+    ok = all(np.array_equal(np.asarray(a, np.float32),
+                            np.asarray(b, np.float32))
+             for a, b in zip(jax.tree.leaves(params),
+                             jax.tree.leaves(restored)))
+    print(f"restore bit-exact: {ok}; modeled k-of-n restore time "
+          f"{mgr.last_restore_time:.2f}s (stragglers dodged by k-of-n reads)")
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving example: prefill + batched decode with per-family KV caches.
+
+Loads (or initializes) a reduced model, prefim-fills a batch of prompts
+and streams greedy tokens, exercising the same prefill/decode steps the
+dry-run lowers at scale (GQA cache, MLA latent cache, SSM state).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch gemma3_1b --tokens 16
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import api
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32_1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = api.get_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    B, P, T = args.batch, args.prompt_len, args.prompt_len + args.tokens
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(B, P)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, P, cfg.d_model)), jnp.bfloat16)
+
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=T))
+    decode = jax.jit(model.decode_step)
+
+    t0 = time.time()
+    logits, cache = prefill(params, batch)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print(f"prefill {B}x{P}: {time.time()-t0:.2f}s")
+
+    out = [tok]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {args.tokens-1} steps x {B} seqs in {dt:.2f}s "
+          f"({(args.tokens-1)*B/max(dt,1e-9):.1f} tok/s)")
+    print("sample token ids:", np.asarray(gen[0])[:12])
+    assert bool(jnp.all((gen >= 0) & (gen < cfg.vocab_size)))
+
+
+if __name__ == "__main__":
+    main()

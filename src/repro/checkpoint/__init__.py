@@ -1,0 +1,5 @@
+"""SEARS-backed checkpointing: dedup + erasure-coded, k-of-n restore."""
+
+from repro.checkpoint.manager import SEARSCheckpointManager
+
+__all__ = ["SEARSCheckpointManager"]

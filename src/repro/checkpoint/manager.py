@@ -1,0 +1,140 @@
+"""SEARS-backed checkpoint manager -- the paper's system as the training
+cluster's storage substrate (DESIGN.md S2).
+
+Per save: every leaf of (params, opt_state, data-state) becomes one SEARS
+file ``ckpt/<run>/<step>/<leaf-path>``.  The SEARS pipeline then gives,
+for free:
+
+* **dedup across steps/experiments** -- frozen layers, embeddings shared
+  between runs, and any unchanged optimizer leaves are stored once
+  (content-defined chunking finds unchanged spans even inside partially
+  changed leaves);
+* **(n,k) erasure-coded pieces** -- any n-k storage nodes can die between
+  save and restore with zero data loss, without 2x-3x replication cost;
+* **k-of-n restore reads** -- restore latency is the k-th order statistic,
+  not the max: storage stragglers do not stall a 1000-node cluster's
+  restart (ULB binding keeps one cluster per run for exactly this);
+* **elastic restore** -- the manifest stores global shapes only, so a
+  checkpoint written on one mesh restores onto any other.
+
+``save_async`` offloads the serialize+upload to a background thread so the
+training loop only blocks on the device->host copy.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+
+from repro.checkpoint import serializer
+from repro.core.store import SEARSStore
+
+
+class CheckpointError(RuntimeError):
+    pass
+
+
+class SEARSCheckpointManager:
+    def __init__(self, store: SEARSStore | None = None, run: str = "run0",
+                 user: str = "trainer", keep_last: int = 3, **store_kw):
+        store_kw.setdefault("binding", "ulb")  # fast-restart read path
+        store_kw.setdefault("num_clusters", 4)
+        self.store = store or SEARSStore(**store_kw)
+        self.run = run
+        self.user = user
+        self.keep_last = keep_last
+        self._steps: list[int] = []
+        self._lock = threading.Lock()
+        self._pending: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _fname(self, step: int, leaf: str) -> str:
+        return f"ckpt/{self.run}/{step:08d}/{leaf}"
+
+    def _manifest_name(self, step: int) -> str:
+        return self._fname(step, "MANIFEST.json")
+
+    def save(self, step: int, pytree, timestamp: float = 0.0) -> dict:
+        """Synchronous save. Returns upload stats summary."""
+        manifest, blobs = serializer.serialize(pytree)
+        with self._lock:
+            total_up = 0
+            total_bytes = 0
+            for name, blob in blobs.items():
+                st = self.store.put_file(self.user, self._fname(step, name),
+                                         blob, timestamp=timestamp)
+                total_up += st.bytes_uploaded
+                total_bytes += st.file_bytes
+            self.store.put_file(self.user, self._manifest_name(step),
+                                manifest.encode(), timestamp=timestamp)
+            self._steps.append(step)
+            self._gc()
+        return {"step": step, "bytes": total_bytes,
+                "bytes_after_dedup": total_up,
+                "dedup_saving": 1.0 - total_up / max(1, total_bytes)}
+
+    def save_async(self, step: int, pytree, timestamp: float = 0.0):
+        """Device->host copy now; chunk/hash/encode/upload in background."""
+        host_tree = jax.tree.map(jax.device_get, pytree)
+        self.wait()
+        t = threading.Thread(target=self.save,
+                             args=(step, host_tree, timestamp), daemon=True)
+        t.start()
+        self._pending = t
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        while len(self._steps) > self.keep_last:
+            old = self._steps.pop(0)
+            for fname in list(self.store.switching[self.user].table):
+                if fname.startswith(f"ckpt/{self.run}/{old:08d}/"):
+                    self.store.delete_file(self.user, fname)
+
+    # ------------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(self._steps)
+
+    def latest_step(self) -> int | None:
+        return max(self._steps) if self._steps else None
+
+    def restore(self, like, step: int | None = None, shardings=None):
+        """Restore the checkpoint at ``step`` (default: latest complete).
+
+        ``like``: pytree of arrays/ShapeDtypeStructs giving the structure;
+        ``shardings``: optional target shardings (elastic restore).
+        Raises CheckpointError if more than n-k pieces of any chunk are
+        gone.
+        """
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise CheckpointError("no checkpoints saved")
+        with self._lock:
+            try:
+                manifest_blob, _ = self.store.get_file(
+                    self.user, self._manifest_name(step))
+            except ValueError as e:  # < k pieces survive
+                raise CheckpointError(
+                    f"checkpoint manifest unrecoverable: {e}") from e
+            blobs: dict[str, bytes] = {}
+            flat, _ = jax.tree_util.tree_flatten_with_path(like)
+            restore_stats = []
+            for path, _leaf in flat:
+                name = serializer._path_str(path)
+                try:
+                    blob, st = self.store.get_file(
+                        self.user, self._fname(step, name))
+                except ValueError as e:  # < k pieces survive
+                    raise CheckpointError(
+                        f"checkpoint leaf {name} unrecoverable: {e}") from e
+                blobs[name] = blob
+                restore_stats.append(st)
+        tree = serializer.deserialize(manifest_blob.decode(), blobs, like,
+                                      shardings=shardings)
+        self.last_restore_time = sum(s.time_s for s in restore_stats)
+        return tree

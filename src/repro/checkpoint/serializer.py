@@ -1,0 +1,76 @@
+"""Pytree <-> bytes serialization with a mesh-independent manifest.
+
+Each leaf serializes to raw little-endian bytes plus a manifest record
+(path, dtype, global shape).  Restore rebuilds the host array and
+``jax.device_put``s it onto *any* target sharding -- the checkpoint format
+never encodes the mesh, which is what makes elastic restore (write on one
+mesh shape, resume on another) a no-op.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _path_str(path) -> str:
+    keys = []
+    for k in path:
+        keys.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return _SEP.join(keys)
+
+
+def serialize(pytree) -> tuple[str, dict[str, bytes]]:
+    """Returns (manifest_json, {leaf_path: raw_bytes})."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(pytree)
+    records = []
+    blobs: dict[str, bytes] = {}
+    for path, leaf in flat:
+        name = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            payload = arr.view(np.uint16).tobytes()
+            dtype = "bfloat16"
+        else:
+            payload = arr.tobytes()
+            dtype = arr.dtype.name
+        records.append({"path": name, "dtype": dtype,
+                        "shape": list(arr.shape)})
+        blobs[name] = payload
+    manifest = json.dumps({"treedef": str(treedef), "leaves": records})
+    return manifest, blobs
+
+
+def deserialize(manifest_json: str, blobs: dict[str, bytes], like,
+                shardings=None):
+    """Rebuild a pytree with the structure of ``like``.
+
+    ``like``: pytree of arrays or ShapeDtypeStructs providing the treedef.
+    ``shardings``: optional matching pytree of NamedShardings -- leaves are
+    device_put onto them (elastic restore path).
+    """
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    records = {r["path"]: r for r in json.loads(manifest_json)["leaves"]}
+    shard_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat_like))
+    out = []
+    for (path, leaf), sh in zip(flat_like, shard_flat):
+        name = _path_str(path)
+        rec = records[name]
+        raw = blobs[name]
+        if rec["dtype"] == "bfloat16":
+            arr = np.frombuffer(raw, np.uint16).reshape(rec["shape"])
+            arr = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = np.frombuffer(raw, np.dtype(rec["dtype"])).reshape(
+                rec["shape"])
+            arr = jnp.asarray(arr)
+        if sh is not None:
+            arr = jax.device_put(arr, sh)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

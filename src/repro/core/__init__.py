@@ -1,0 +1,15 @@
+"""SEARS core: chunking, dedup, erasure coding, binding, storage."""
+
+from repro.core.binding import ChunkLevelBinding, UserLevelBinding, make_binding
+from repro.core.chunking import Chunker, DEFAULT_CHUNKER
+from repro.core.hashing import chunk_id, fast_chunk_id
+from repro.core.latency import LatencyParams, calibrate
+from repro.core.radmad import RADMADStore
+from repro.core.rs_code import RSCode
+from repro.core.store import SEARSStore
+
+__all__ = [
+    "ChunkLevelBinding", "UserLevelBinding", "make_binding",
+    "Chunker", "DEFAULT_CHUNKER", "chunk_id", "fast_chunk_id",
+    "LatencyParams", "calibrate", "RADMADStore", "RSCode", "SEARSStore",
+]

@@ -1,0 +1,120 @@
+"""Content-defined chunking (CDC) with a gear rolling hash.
+
+Paper parameters (SEARS S II): average chunk 4 KB, min 1 KB, max 8 KB.
+
+The gear recurrence ``h_t = 2*h_{t-1} + gear[b_t] (mod 2^32)`` is linear, so
+
+    h_t = sum_{j=0..31} 2^j * gear[b_{t-j}]   (mod 2^32)
+
+-- a 32-tap windowed weighted sum.  This is the TPU-native formulation
+(data-parallel, no sequential scan); the Pallas kernel in
+``repro.kernels.gear_cdc`` evaluates it tile-wise with a 31-byte halo, and
+this module provides the vectorized numpy twin used by the host storage
+path plus the byte-at-a-time reference used as the test oracle.
+
+Boundary *candidates* ``(h & MASK) == 0`` are data-parallel; the greedy
+min/max chunk-size selection is inherently sequential but touches only the
+sparse candidate list (~N/4096 positions), so it stays on the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+GEAR_SEED = 0x5EA125  # fixed so chunk ids are stable across runs/hosts
+_rng = np.random.RandomState(GEAR_SEED)
+GEAR_TABLE = _rng.randint(0, 2**32, size=256, dtype=np.uint64).astype(np.uint32)
+del _rng
+
+WINDOW = 32  # bytes of history that influence the uint32 gear hash
+
+
+def gear_hash_np(data: np.ndarray) -> np.ndarray:
+    """Windowed-sum gear hash. (N,) uint8 -> (N,) uint32, h[t] as defined above."""
+    data = np.asarray(data, dtype=np.uint8)
+    g = GEAR_TABLE[data]  # (N,) uint32
+    h = np.zeros_like(g)
+    # h[t] = sum_j g[t-j] << j ; vectorized as 32 shifted adds
+    for j in range(min(WINDOW, g.shape[0])):
+        h[j:] += g[: g.shape[0] - j] << np.uint32(j)
+    return h
+
+
+def gear_hash_sequential(data: np.ndarray) -> np.ndarray:
+    """Byte-at-a-time oracle: h = (h << 1) + gear[b] in uint32."""
+    data = np.asarray(data, dtype=np.uint8)
+    out = np.zeros(data.shape[0], dtype=np.uint32)
+    h = np.uint32(0)
+    for t, b in enumerate(data):
+        h = np.uint32((np.uint64(h) * 2 + np.uint64(GEAR_TABLE[b])) & 0xFFFFFFFF)
+        out[t] = h
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunker:
+    """Gear-CDC chunker with min/avg/max size constraints."""
+
+    min_size: int = 1024
+    avg_size: int = 4096
+    max_size: int = 8192
+
+    @property
+    def mask(self) -> np.uint32:
+        bits = int(np.log2(self.avg_size))
+        # use the high bits of the hash (low gear bits mix poorly)
+        return np.uint32(((1 << bits) - 1) << (32 - bits))
+
+    def candidates(self, data: np.ndarray, hash_fn=gear_hash_np) -> np.ndarray:
+        """Sorted cut offsets (exclusive-end positions) where the hash fires."""
+        h = hash_fn(np.asarray(data, dtype=np.uint8))
+        return np.flatnonzero((h & self.mask) == 0) + 1  # cut *after* byte t
+
+    def boundaries(self, data, hash_fn=gear_hash_np) -> np.ndarray:
+        """Greedy min/max-constrained cut offsets; always ends at len(data)."""
+        data = np.frombuffer(data, dtype=np.uint8) if isinstance(
+            data, (bytes, bytearray, memoryview)) else np.asarray(data, np.uint8)
+        n = data.shape[0]
+        if n == 0:
+            return np.zeros(0, dtype=np.int64)
+        cand = self.candidates(data, hash_fn=hash_fn)
+        return select_boundaries(cand, n, self.min_size, self.max_size)
+
+    def chunk_spans(self, data, hash_fn=gear_hash_np) -> list[tuple[int, int]]:
+        """[(offset, length), ...] covering the input exactly."""
+        cuts = self.boundaries(data, hash_fn=hash_fn)
+        spans, start = [], 0
+        for c in cuts:
+            spans.append((start, int(c) - start))
+            start = int(c)
+        return spans
+
+    def chunk(self, data: bytes, hash_fn=gear_hash_np) -> list[bytes]:
+        view = memoryview(data)
+        return [bytes(view[o : o + l]) for o, l in self.chunk_spans(data, hash_fn)]
+
+
+def select_boundaries(cand: np.ndarray, n: int, min_size: int,
+                      max_size: int) -> np.ndarray:
+    """Greedy selection over sparse candidates; sequential but O(#chunks log C)."""
+    cuts = []
+    start = 0
+    cand = np.asarray(cand, dtype=np.int64)
+    while start < n:
+        if n - start <= min_size:
+            cut = n
+        else:
+            window_end = min(start + max_size, n)
+            lo = int(np.searchsorted(cand, start + min_size, side="left"))
+            if lo < cand.shape[0] and cand[lo] <= window_end:
+                cut = int(cand[lo])
+            else:
+                cut = window_end
+        cuts.append(cut)
+        start = cut
+    return np.asarray(cuts, dtype=np.int64)
+
+
+DEFAULT_CHUNKER = Chunker()

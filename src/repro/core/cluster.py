@@ -1,0 +1,172 @@
+"""Storage nodes, clusters and switching nodes (paper S II, Fig. 1).
+
+``StorageNode`` is an in-process stand-in for one server: it holds code
+pieces keyed by (chunk_id, piece_index), enforces a capacity, and can be
+killed / revived / marked slow for fault-tolerance and straggler tests.
+
+``Cluster`` groups n nodes; exactly one code piece of every chunk bound to
+the cluster lives on each node.  Any node can act as the *coding node* for
+a chunk (we pick one deterministically from the chunk id, which also
+balances coding load).
+
+``SwitchingNode`` is the per-user entry point: it owns the user's
+chunk-meta-data-table and answers "which of these chunk ids are missing"
+during upload (inter-file dedup) and serves file chunk-meta-data during
+retrieval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dedup
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+class NodeDownError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StorageNode:
+    node_id: int
+    capacity: int  # bytes
+    alive: bool = True
+    slow_factor: float = 1.0  # >1 models a straggler
+    used: int = 0
+
+    def __post_init__(self) -> None:
+        self._pieces: dict[tuple[bytes, int], bytes] = {}
+
+    def put(self, chunk_id: bytes, piece_idx: int, piece: bytes) -> None:
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        key = (chunk_id, piece_idx)
+        if key in self._pieces:
+            return  # idempotent
+        if self.used + len(piece) > self.capacity:
+            raise CapacityError(f"node {self.node_id} full")
+        self._pieces[key] = piece
+        self.used += len(piece)
+
+    def get(self, chunk_id: bytes, piece_idx: int) -> bytes:
+        if not self.alive:
+            raise NodeDownError(f"node {self.node_id} is down")
+        return self._pieces[(chunk_id, piece_idx)]
+
+    def has(self, chunk_id: bytes, piece_idx: int) -> bool:
+        return self.alive and (chunk_id, piece_idx) in self._pieces
+
+    def delete(self, chunk_id: bytes, piece_idx: int) -> None:
+        piece = self._pieces.pop((chunk_id, piece_idx), None)
+        if piece is not None:
+            self.used -= len(piece)
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.used
+
+
+class Cluster:
+    """n storage nodes holding one code piece each per bound chunk."""
+
+    def __init__(self, cluster_id: int, n: int, node_capacity: int) -> None:
+        self.cluster_id = cluster_id
+        self.nodes = [StorageNode(node_id=i, capacity=node_capacity)
+                      for i in range(n)]
+        self.n = n
+
+    def coding_node(self, chunk_id: bytes) -> int:
+        """Deterministic coding-node choice; spreads coding load."""
+        return int.from_bytes(chunk_id[:4], "big") % self.n
+
+    def store_chunk(self, chunk_id: bytes, pieces: list[bytes],
+                    min_pieces: int | None = None) -> None:
+        """Store one piece per node.  Dead nodes are skipped (degraded
+        write -- reliability is reduced until ``repair_cluster`` runs) as
+        long as at least ``min_pieces`` (default: all n) land."""
+        if len(pieces) != self.n:
+            raise ValueError(f"expected {self.n} pieces, got {len(pieces)}")
+        stored = 0
+        for node, piece in zip(self.nodes, pieces):
+            if node.alive:
+                node.put(chunk_id, node.node_id, piece)
+                stored += 1
+        need = self.n if min_pieces is None else min_pieces
+        if stored < need:
+            raise NodeDownError(
+                f"cluster {self.cluster_id}: only {stored} alive nodes, "
+                f"need {need}")
+
+    def read_pieces(self, chunk_id: bytes, want: int) -> dict[int, bytes]:
+        """Collect up to ``want`` pieces from alive nodes holding them."""
+        out: dict[int, bytes] = {}
+        for node in self.nodes:
+            if len(out) >= want:
+                break
+            if node.has(chunk_id, node.node_id):
+                out[node.node_id] = node.get(chunk_id, node.node_id)
+        return out
+
+    def delete_chunk(self, chunk_id: bytes) -> None:
+        for node in self.nodes:
+            node.delete(chunk_id, node.node_id)
+
+    @property
+    def free(self) -> int:
+        return sum(node.free for node in self.nodes)
+
+    @property
+    def used(self) -> int:
+        return sum(node.used for node in self.nodes)
+
+    @property
+    def capacity(self) -> int:
+        return sum(node.capacity for node in self.nodes)
+
+    def kill_nodes(self, ids: list[int]) -> None:
+        for i in ids:
+            self.nodes[i].alive = False
+
+    def revive_nodes(self, ids: list[int]) -> None:
+        for i in ids:
+            self.nodes[i].alive = True
+
+    def set_stragglers(self, ids: list[int], factor: float) -> None:
+        for i in ids:
+            self.nodes[i].slow_factor = factor
+
+    def alive_count(self) -> int:
+        return sum(1 for node in self.nodes if node.alive)
+
+
+class SwitchingNode:
+    """Per-user SEARS entry point holding the chunk-meta-data-table."""
+
+    def __init__(self, user: str) -> None:
+        self.user = user
+        self.table: dict[str, dedup.FileMeta] = {}
+
+    def put_meta(self, filename: str, meta: dedup.FileMeta) -> None:
+        """Timestamp-latest-wins synchronization (paper S II)."""
+        old = self.table.get(filename)
+        if old is None or meta.timestamp >= old.timestamp:
+            self.table[filename] = meta
+
+    def get_meta(self, filename: str) -> dedup.FileMeta:
+        return self.table[filename]
+
+    def drop_meta(self, filename: str) -> dedup.FileMeta:
+        return self.table.pop(filename)
+
+    def missing_chunks(self, chunk_ids: list[bytes], index: dedup.ChunkIndex,
+                       scope=None) -> list[bytes]:
+        """Inter-file dedup: which ids must the end device upload?"""
+        return [cid for cid in chunk_ids if index.lookup(cid, scope) is None]
+
+    @property
+    def meta_bytes(self) -> int:
+        return sum(m.meta_bytes for m in self.table.values())

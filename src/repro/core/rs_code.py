@@ -1,0 +1,127 @@
+"""Systematic (n,k) Reed-Solomon erasure codes over GF(2^8).
+
+Construction: G = [I_k ; P] with P an (n-k, k) Cauchy matrix
+``P[i,j] = 1/(x_i + y_j)`` (x,y disjoint element sets), so every k-row
+subset of G is invertible (MDS property).  The first k code pieces are the
+data itself -- the paper's fast path where, if the k systematic pieces are
+the first to arrive, reconstruction is a memcpy.
+
+Encode/decode of batches is delegated to ``repro.kernels.ops`` (bit-sliced
+Pallas kernel with pure-jnp fallback); this module provides the host-side
+numpy path used by the storage simulator plus the matrix machinery shared
+by both.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import gf256
+
+
+@functools.lru_cache(maxsize=None)
+def generator_matrix(n: int, k: int) -> np.ndarray:
+    """Systematic MDS generator matrix, shape (n, k), dtype int32."""
+    if not (0 < k <= n <= gf256.FIELD // 2):
+        raise ValueError(f"need 0 < k <= n <= 128, got (n,k)=({n},{k})")
+    ident = np.eye(k, dtype=np.int32)
+    if n == k:
+        return ident
+    x = np.arange(k, n, dtype=np.int32)  # n-k values: k .. n-1
+    y = np.arange(k, dtype=np.int32)  # k values: 0 .. k-1  (disjoint from x)
+    denom = x[:, None] ^ y[None, :]  # GF addition is XOR
+    P = gf256.gf_inv(denom)
+    return np.concatenate([ident, P], axis=0)
+
+
+@functools.lru_cache(maxsize=None)
+def decode_matrix(n: int, k: int, indices: tuple[int, ...]) -> np.ndarray:
+    """Inverse of the k rows of G selected by ``indices`` (k,k) int32."""
+    if len(indices) != k:
+        raise ValueError(f"need exactly k={k} piece indices, got {len(indices)}")
+    G = generator_matrix(n, k)
+    sub = G[np.asarray(indices, dtype=np.int64)]
+    return gf256.gf_mat_inv(sub)
+
+
+def _gf_matmul_batched_np(M: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """(r,k) GF matrix applied to (..., k, L) uint8 -> (..., r, L) uint8."""
+    data = np.asarray(data, dtype=np.int32)
+    r, k = M.shape
+    out = np.zeros(data.shape[:-2] + (r, data.shape[-1]), dtype=np.int32)
+    for j in range(k):
+        out ^= gf256.gf_mul(M[:, j].reshape((1,) * (data.ndim - 2) + (r, 1)),
+                            data[..., j : j + 1, :])
+    return out.astype(np.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class RSCode:
+    """(n,k) systematic Reed-Solomon codec."""
+
+    n: int
+    k: int
+
+    def __post_init__(self):
+        generator_matrix(self.n, self.k)  # validate early
+
+    # -- array API (numpy host path) ------------------------------------
+    def encode(self, data: np.ndarray) -> np.ndarray:
+        """(..., k, L) uint8 data pieces -> (..., n, L) uint8 code pieces."""
+        data = np.asarray(data, dtype=np.uint8)
+        if data.shape[-2] != self.k:
+            raise ValueError(f"expected k={self.k} data pieces, got {data.shape}")
+        return _gf_matmul_batched_np(generator_matrix(self.n, self.k), data)
+
+    def decode(self, pieces: np.ndarray, indices) -> np.ndarray:
+        """Reconstruct (..., k, L) data from any k pieces.
+
+        ``pieces``: (..., k, L) uint8 -- the k received pieces, in the order
+        given by ``indices`` (each in [0, n)).
+        """
+        indices = tuple(int(i) for i in indices)
+        pieces = np.asarray(pieces, dtype=np.uint8)
+        if sorted(indices) == list(range(self.k)):
+            # systematic fast path: the data pieces themselves arrived
+            order = np.argsort(np.asarray(indices))
+            return np.take(pieces, order, axis=-2)
+        M = decode_matrix(self.n, self.k, indices)
+        return _gf_matmul_batched_np(M, pieces)
+
+    # -- bytes API (storage path) ----------------------------------------
+    def piece_len(self, nbytes: int) -> int:
+        return max(1, -(-nbytes // self.k))
+
+    def encode_bytes(self, blob: bytes) -> list[bytes]:
+        """Split a blob into k pieces (zero-padded) and encode to n pieces."""
+        L = self.piece_len(len(blob))
+        buf = np.zeros(self.k * L, dtype=np.uint8)
+        buf[: len(blob)] = np.frombuffer(blob, dtype=np.uint8)
+        pieces = self.encode(buf.reshape(self.k, L))
+        return [pieces[i].tobytes() for i in range(self.n)]
+
+    def decode_bytes(self, pieces: dict[int, bytes], nbytes: int) -> bytes:
+        """Reconstruct the original blob from any k of the n pieces.
+
+        ``pieces`` maps piece index -> piece bytes; ``nbytes`` is the
+        original blob length (stored in chunk metadata).
+        """
+        if len(pieces) < self.k:
+            raise ValueError(
+                f"need >= k={self.k} pieces to decode, got {len(pieces)}")
+        idx = sorted(pieces)[: self.k]
+        L = self.piece_len(nbytes)
+        stack = np.stack(
+            [np.frombuffer(pieces[i], dtype=np.uint8) for i in idx])
+        if stack.shape != (self.k, L):
+            raise ValueError(f"piece shape mismatch: {stack.shape} != {(self.k, L)}")
+        data = self.decode(stack, idx)
+        return data.reshape(-1)[:nbytes].tobytes()
+
+    @property
+    def storage_overhead(self) -> float:
+        """Space expansion factor n/k of the code."""
+        return self.n / self.k

@@ -1,0 +1,249 @@
+"""SEARS public API: a space-efficient, reliable, fast-retrieval store.
+
+Composes the paper's pipeline end to end:
+
+  upload:   CDC chunk -> SHA-1 id -> intra-file dedup (client) ->
+            inter-file dedup at the switching node (scope set by the
+            binding scheme) -> (n,k) RS encode at the coding node ->
+            one piece per storage node of the bound cluster.
+
+  download: fetch file chunk-meta-data from the switching node -> skip
+            chunks already in the device's local store -> k-of-n piece
+            reads per missing chunk -> GF(256) decode -> reassemble.
+
+Wall-clock retrieval time is simulated by ``repro.core.latency`` (no real
+network in this container); byte-level correctness is real -- every piece
+is stored, read back and decoded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dedup, hashing
+from repro.core.binding import make_binding
+from repro.core.chunking import DEFAULT_CHUNKER, Chunker
+from repro.core.cluster import Cluster, SwitchingNode
+from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
+from repro.core.rs_code import RSCode
+
+
+@dataclasses.dataclass
+class UploadStats:
+    filename: str
+    file_bytes: int
+    n_chunks: int
+    n_unique_in_file: int
+    n_new_chunks: int
+    bytes_uploaded: int  # post-dedup bytes sent device -> SEARS
+    piece_bytes_written: int  # post-coding bytes written to nodes
+
+
+@dataclasses.dataclass
+class RetrievalStats:
+    filename: str
+    file_bytes: int
+    time_s: float
+    n_chunks: int
+    n_fetched: int  # unique chunks actually downloaded
+    bytes_fetched: int
+    clusters_touched: int
+
+
+@dataclasses.dataclass
+class StoreStats:
+    logical_bytes: int  # total size of all original files (numerator)
+    piece_bytes: int  # bytes on storage nodes (post dedup + coding)
+    index_bytes: int  # chunk index + chunk-meta-data tables
+    n_unique_chunks: int
+    n_files: int
+
+    @property
+    def consumed_bytes(self) -> int:
+        return self.piece_bytes + self.index_bytes
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Paper metric: original bytes / SEARS consumption (incl. index)."""
+        return self.logical_bytes / max(1, self.consumed_bytes)
+
+
+class SEARSStore:
+    def __init__(self, n: int = 10, k: int = 5, num_clusters: int = 20,
+                 node_capacity: int = 1 << 30, binding: str = "ulb",
+                 chunker: Chunker = DEFAULT_CHUNKER,
+                 latency: LatencyParams | None = None, seed: int = 0,
+                 hash_fn=hashing.chunk_id) -> None:
+        self.code = RSCode(n, k)
+        self.n, self.k = n, k
+        self.chunker = chunker
+        self.clusters = [Cluster(i, n, node_capacity)
+                         for i in range(num_clusters)]
+        self.index = dedup.ChunkIndex()
+        self.binding = make_binding(binding)
+        self.switching: dict[str, SwitchingNode] = {}
+        self.latency = latency or LatencyParams()
+        self.rng = np.random.default_rng(seed)
+        self.hash_fn = hash_fn
+        self.logical_bytes = 0
+        self.n_files = 0
+
+    # ------------------------------------------------------------------
+    def _switch(self, user: str) -> SwitchingNode:
+        if user not in self.switching:
+            self.switching[user] = SwitchingNode(user)
+        return self.switching[user]
+
+    def put_file(self, user: str, filename: str, data: bytes,
+                 timestamp: float = 0.0) -> UploadStats:
+        sw = self._switch(user)
+        if filename in sw.table:
+            self.delete_file(user, filename)
+
+        spans = self.chunker.chunk_spans(data)
+        view = memoryview(data)
+        chunks = [bytes(view[o:o + l]) for o, l in spans]
+        ids = [self.hash_fn(c) for c in chunks]
+        unique_ids, _ = dedup.dedup_file(ids)  # intra-file dedup (client)
+        by_id: dict[bytes, bytes] = {}
+        for cid, chunk in zip(ids, chunks):
+            by_id.setdefault(cid, chunk)
+
+        scope = self.binding.dedup_scope(user, self.clusters)
+        bytes_uploaded = 0
+        piece_bytes_written = 0
+        n_new = 0
+        resolved: dict[bytes, int] = {}  # chunk id -> cluster holding our copy
+
+        for cid in unique_ids:
+            info = self.index.lookup(cid, scope)  # inter-file dedup
+            if info is None:
+                chunk = by_id[cid]
+                piece_len = self.code.piece_len(len(chunk))
+                cluster = self.binding.choose_cluster(
+                    user, cid, self.n * piece_len, self.clusters)
+                pieces = self.code.encode_bytes(chunk)  # coding node
+                cluster.store_chunk(cid, pieces, min_pieces=self.k)
+                self.index.add(cid, cluster.cluster_id, len(chunk))
+                bytes_uploaded += len(chunk)
+                piece_bytes_written += self.n * piece_len
+                resolved[cid] = cluster.cluster_id
+                n_new += 1
+            else:
+                resolved[cid] = info.cluster_id
+            # refcount = #files referencing this copy
+            self.index.add_ref(cid, resolved[cid])
+
+        entries = [(cid, resolved[cid]) for cid in ids]
+
+        meta = dedup.FileMeta(timestamp=timestamp, entries=entries,
+                              lengths=[l for _, l in spans])
+        sw.put_meta(filename, meta)
+        self.logical_bytes += len(data)
+        self.n_files += 1
+        return UploadStats(filename=filename, file_bytes=len(data),
+                           n_chunks=len(chunks),
+                           n_unique_in_file=len(unique_ids),
+                           n_new_chunks=n_new,
+                           bytes_uploaded=bytes_uploaded,
+                           piece_bytes_written=piece_bytes_written)
+
+    # ------------------------------------------------------------------
+    def get_file(self, user: str, filename: str,
+                 local_chunk_ids: set[bytes] | None = None,
+                 rho_fn=None) -> tuple[bytes, RetrievalStats]:
+        sw = self._switch(user)
+        meta = sw.get_meta(filename)
+        local = local_chunk_ids or set()
+
+        need: dict[bytes, int] = {}  # unique missing chunk -> cluster
+        for cid, cluster_id in meta.entries:
+            if cid not in local and cid not in need:
+                need[cid] = cluster_id
+
+        # fetch + decode (byte-correct path)
+        decoded: dict[bytes, bytes] = {}
+        share_bytes: dict[int, int] = {}
+        for cid, cluster_id in need.items():
+            info = self.index.get(cid, cluster_id)
+            if info is None:
+                raise KeyError(f"chunk {cid.hex()} lost from index")
+            pieces = self.clusters[cluster_id].read_pieces(cid, self.k)
+            decoded[cid] = self.code.decode_bytes(pieces, info.length)
+            share_bytes[cluster_id] = share_bytes.get(cluster_id, 0) + info.length
+
+        out = bytearray()
+        lengths = meta.lengths
+        for (cid, _), ln in zip(meta.entries, lengths):
+            blob = decoded.get(cid)
+            if blob is None:
+                blob = self._read_local_placeholder(cid, ln)
+            out += blob[:ln]
+
+        shares = [ClusterShare(cl, nb, rho=(rho_fn(cl) if rho_fn else 0.0))
+                  for cl, nb in share_bytes.items()]
+        t = retrieval_time(shares, self.n, self.k, self.latency, self.rng)
+        stats = RetrievalStats(filename=filename, file_bytes=meta.size,
+                               time_s=t, n_chunks=len(meta.entries),
+                               n_fetched=len(need),
+                               bytes_fetched=sum(share_bytes.values()),
+                               clusters_touched=len(share_bytes))
+        return bytes(out), stats
+
+    def _read_local_placeholder(self, cid: bytes, length: int) -> bytes:
+        """Local-cache hit: the device already holds the chunk.
+
+        The simulator does not persist device caches, so rebuild the chunk
+        from SEARS (time is *not* charged -- it was a cache hit)."""
+        info = self.index.get(cid)
+        pieces = self.clusters[info.cluster_id].read_pieces(cid, self.k)
+        return self.code.decode_bytes(pieces, info.length)
+
+    # ------------------------------------------------------------------
+    def delete_file(self, user: str, filename: str) -> None:
+        sw = self._switch(user)
+        meta = sw.drop_meta(filename)
+        self.logical_bytes -= meta.size
+        self.n_files -= 1
+        seen: set[tuple[bytes, int]] = set()
+        for cid, cluster_id in meta.entries:
+            if (cid, cluster_id) in seen:
+                continue
+            seen.add((cid, cluster_id))
+            if self.index.release(cid, cluster_id):
+                self.clusters[cluster_id].delete_chunk(cid)
+
+    # ------------------------------------------------------------------
+    def repair_cluster(self, cluster_id: int) -> int:
+        """Re-create missing pieces on revived/replacement nodes.
+
+        Returns the number of pieces rebuilt.  Requires >= k alive nodes.
+        """
+        cluster = self.clusters[cluster_id]
+        rebuilt = 0
+        for cid in list(self.index.cluster_chunks(cluster_id)):
+            info = self.index.get(cid, cluster_id)
+            pieces = cluster.read_pieces(cid, self.k)
+            if len(pieces) < self.k:
+                raise RuntimeError(
+                    f"chunk {cid.hex()} unrecoverable: {len(pieces)} < k")
+            blob = self.code.decode_bytes(pieces, info.length)
+            all_pieces = self.code.encode_bytes(blob)
+            for node in cluster.nodes:
+                if node.alive and not node.has(cid, node.node_id):
+                    node.put(cid, node.node_id, all_pieces[node.node_id])
+                    rebuilt += 1
+        return rebuilt
+
+    # ------------------------------------------------------------------
+    def stats(self) -> StoreStats:
+        piece_bytes = sum(c.used for c in self.clusters)
+        index_bytes = self.index.index_bytes + sum(
+            sw.meta_bytes for sw in self.switching.values())
+        return StoreStats(logical_bytes=self.logical_bytes,
+                          piece_bytes=piece_bytes,
+                          index_bytes=index_bytes,
+                          n_unique_chunks=len(self.index),
+                          n_files=self.n_files)

@@ -1,0 +1,197 @@
+"""Synthetic workload mirroring the paper's evaluation dataset (S IV).
+
+The paper's trace: 10 users over 21 days -- (1) 1.6 TB user personal data,
+(2) 132 GB hourly system logs, (3) 3.5 TB daily system backup images.  We
+synthesize the same *redundancy structure* at a configurable scale (default
+~1/20000) because dedup ratios and the k/n curve shapes depend on the
+structure, not on absolute volume (DESIGN.md S8):
+
+* personal files: lognormal sizes; content is a mix of user-private blocks,
+  a cross-user shared pool (inter-user redundancy for CLB to win on), and
+  edited re-uploads of the user's earlier files (intra-user redundancy
+  that both ULB and CLB capture).
+* system logs: append-mostly -- each hour's file is the previous plus new
+  tail, rotated daily.
+* backup images: one large file per user per day, ~97% identical
+  day-over-day with in-place edits.
+
+Every event also carries the hour-of-day so Fig 3(d)'s diurnal load replay
+works: requests follow the paper's day-shape (light 0:00-8:00, heavy and
+fluctuating 8:00-24:00).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections.abc import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FileEvent:
+    day: int
+    hour: int
+    user: str
+    filename: str
+    data: bytes
+    kind: str  # personal | log | backup
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    n_users: int = 10
+    n_days: int = 21
+    scale: float = 1.0 / 20000.0  # fraction of the paper's byte volume
+    seed: int = 7
+    # paper volumes (bytes) scaled by `scale`
+    personal_total: int = int(1.6e12)
+    log_total: int = int(132e9)
+    backup_total: int = int(3.5e12)
+    block: int = 16 << 10  # building-block granularity for shared content
+    shared_fraction: float = 0.35  # of personal data drawn from shared pool
+    edit_fraction: float = 0.25  # of personal files that are edits of old ones
+    backup_change: float = 0.03  # day-over-day backup image churn
+
+
+class _BlockPool:
+    """Deterministic pool of content blocks (shared redundancy source)."""
+
+    def __init__(self, rng: np.random.Generator, block: int, count: int):
+        self.block = block
+        self.count = count
+        self._seeds = rng.integers(0, 2**63 - 1, size=count, dtype=np.int64)
+
+    def get(self, idx: int) -> bytes:
+        r = np.random.default_rng(int(self._seeds[idx % self.count]))
+        return r.integers(0, 256, size=self.block, dtype=np.int64).astype(
+            np.uint8).tobytes()
+
+
+def _diurnal_hours(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Sample hours with the paper's day-shape (light overnight)."""
+    w = np.array([0.2] * 8 + [1.0, 1.4, 1.6, 1.5, 1.2, 1.4, 1.6, 1.7,
+                              1.5, 1.3, 1.0, 0.8, 0.7, 0.5, 0.4, 0.3])
+    w = w / w.sum()
+    return rng.choice(24, size=n, p=w)
+
+
+def generate_events(cfg: WorkloadConfig) -> Iterator[FileEvent]:
+    rng = np.random.default_rng(cfg.seed)
+    pool = _BlockPool(rng, cfg.block, count=4096)
+    users = [f"user{u}" for u in range(cfg.n_users)]
+
+    # -- per-user state ---------------------------------------------------
+    history: dict[str, list[tuple[str, int]]] = {u: [] for u in users}
+    backup_state: dict[str, np.ndarray] = {}
+    log_state: dict[str, bytearray] = {u: bytearray() for u in users}
+
+    personal_per_day = int(cfg.personal_total * cfg.scale) // cfg.n_days
+    log_per_hour = max(256, int(cfg.log_total * cfg.scale) //
+                       (cfg.n_days * 24 * cfg.n_users))
+    backup_size = max(4096, int(cfg.backup_total * cfg.scale) //
+                      (cfg.n_days * cfg.n_users))
+
+    file_counter = 0
+    for day in range(cfg.n_days):
+        # ---------------- personal data ----------------
+        produced = 0
+        while produced < personal_per_day:
+            user = users[int(rng.integers(cfg.n_users))]
+            hour = int(_diurnal_hours(rng, 1)[0])
+            size = int(np.clip(rng.lognormal(np.log(96e3), 1.2), 8e3, 4e6))
+            if history[user] and rng.random() < cfg.edit_fraction:
+                # edited re-upload of an earlier file: regenerate + mutate
+                src_name, src_seed = history[user][
+                    int(rng.integers(len(history[user])))]
+                data = bytearray(_personal_bytes(src_seed, size, pool, cfg))
+                n_edits = max(1, size // (64 << 10))
+                for _ in range(n_edits):
+                    off = int(rng.integers(0, max(1, len(data) - 256)))
+                    data[off:off + 256] = rng.integers(
+                        0, 256, 256, dtype=np.int64).astype(np.uint8).tobytes()
+                name = f"{src_name}.v{day}"
+                blob = bytes(data)
+            else:
+                seed = int(rng.integers(2**62))
+                blob = _personal_bytes(seed, size, pool, cfg)
+                name = f"p{file_counter}"
+                history[user].append((name, seed))
+            file_counter += 1
+            produced += len(blob)
+            yield FileEvent(day, hour, user, f"personal/{name}", blob,
+                            "personal")
+        # ---------------- system logs (hourly) ----------------
+        for user in users:
+            for hour in range(24):
+                tail = np.random.default_rng(
+                    cfg.seed * 1000003 + day * 24 + hour).integers(
+                        0, 256, size=log_per_hour, dtype=np.int64
+                    ).astype(np.uint8).tobytes()
+                log_state[user] += tail
+                yield FileEvent(day, hour, user,
+                                f"var/log/syslog.{day}", bytes(log_state[user]),
+                                "log")
+            if (day + 1) % 1 == 0:
+                log_state[user] = bytearray()  # daily rotation
+        # ---------------- backup images (daily) ----------------
+        for user in users:
+            img = backup_state.get(user)
+            r = np.random.default_rng(cfg.seed * 7919 + hash(user) % 1000 + day)
+            if img is None:
+                img = r.integers(0, 256, size=backup_size,
+                                 dtype=np.int64).astype(np.uint8)
+            else:
+                img = img.copy()
+                n_edit_bytes = int(len(img) * cfg.backup_change)
+                n_spots = max(1, n_edit_bytes // 4096)
+                for _ in range(n_spots):
+                    off = int(r.integers(0, max(1, len(img) - 4096)))
+                    img[off:off + 4096] = r.integers(0, 256, 4096,
+                                                     dtype=np.int64).astype(np.uint8)
+            backup_state[user] = img
+            yield FileEvent(day, 3, user, f"backup/image.day{day}",
+                            img.tobytes(), "backup")
+
+
+def _personal_bytes(seed: int, size: int, pool: _BlockPool,
+                    cfg: WorkloadConfig) -> bytes:
+    """Deterministic personal-file content: shared-pool + private blocks."""
+    r = np.random.default_rng(seed)
+    out = bytearray()
+    while len(out) < size:
+        if r.random() < cfg.shared_fraction:
+            out += pool.get(int(r.integers(pool.count)))
+        else:
+            out += r.integers(0, 256, size=cfg.block,
+                              dtype=np.int64).astype(np.uint8).tobytes()
+    return bytes(out[:size])
+
+
+def request_trace(cfg: WorkloadConfig, events: list[FileEvent],
+                  requests_per_user_day: int = 6) -> list[tuple[int, int, str, str]]:
+    """Replayable retrieval trace: (day, hour, user, filename).
+
+    Mirrors the paper's replay of the personal-data access pattern: users
+    re-fetch their own recent personal files with diurnal intensity.
+    """
+    rng = np.random.default_rng(cfg.seed + 1)
+    by_user: dict[str, list[FileEvent]] = {}
+    for ev in events:
+        if ev.kind == "personal":
+            by_user.setdefault(ev.user, []).append(ev)
+    trace = []
+    for day in range(cfg.n_days):
+        for user, evs in by_user.items():
+            avail = [e for e in evs if e.day <= day]
+            if not avail:
+                continue
+            hours = _diurnal_hours(rng, requests_per_user_day)
+            for h in hours:
+                # recency-biased choice
+                idx = len(avail) - 1 - int(
+                    rng.exponential(max(1.0, len(avail) / 4)))
+                ev = avail[int(np.clip(idx, 0, len(avail) - 1))]
+                trace.append((day, int(h), user, ev.filename))
+    trace.sort(key=lambda t: (t[0], t[1]))
+    return trace

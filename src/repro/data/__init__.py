@@ -1,0 +1,1 @@
+"""Data pipeline: tokenized corpora, packing, sharded batches."""

@@ -1,0 +1,1 @@
+"""Distribution: mesh axes, sharding rules, compression, fault injection."""

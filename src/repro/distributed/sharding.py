@@ -1,0 +1,263 @@
+"""Sharding rules: param-name/shape -> PartitionSpec over the mesh.
+
+Mesh axes: ``("data", "model")`` single pod, ``("pod", "data", "model")``
+multi-pod.  Data parallelism runs over (pod, data); tensor/expert/sequence
+parallelism over ``model``.
+
+Parameter policy (megatron-style TP + optional FSDP):
+  * embed / unembed (V, D)           -> V over model (row-parallel gather)
+  * attention wq (D,H,hd), wo        -> H over model
+  * attention wk/wv (D,KV,hd)        -> KV over model if divisible, else
+                                        replicated (tiny; avoids <1 shards)
+  * MLA wuk/wuv/wuq (r,H,d)          -> H over model; latent projections
+                                        (D,r) replicated (small)
+  * MLP wg/wu (D,F) / wd (F,D)       -> F over model
+  * MoE router (D,E)                 -> E over model;
+    experts (E,D,F)/(E,F,D)          -> E over model (EP = TP plane)
+  * Mamba in/out/conv/x_proj/dt/A    -> d_inner over model
+  * norms / biases                   -> replicated
+  * with ``fsdp=True``: the largest remaining dim of every >=2D param is
+    additionally sharded over the data axes (ZeRO-3; GSPMD inserts the
+    per-layer all-gathers).
+
+Activation policy lives in the step builders: batch over (pod, data);
+decode KV caches shard over heads when divisible, else over sequence
+(flash-decoding style -- GSPMD turns the softmax reductions into the
+matching collectives).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Mesh
+    fsdp: bool = False
+    zero1: bool = True  # shard optimizer state over the data plane too
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def data_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.axis_names if a in ("pod", "data"))
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name]
+
+    # ------------------------------------------------------------------
+    def _div(self, dim: int, axis: str) -> bool:
+        return dim >= self.axis_size(axis) and dim % self.axis_size(axis) == 0
+
+    def param_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        """PartitionSpec for a parameter leaf given its path and shape."""
+        name = path[-1] if path else ""
+        m = self.model_axis
+        spec: list = [None] * len(shape)
+        nd = len(shape)
+
+        def last_is(n):  # stacked layer/group dims sit in front
+            return name == n
+
+        # NOTE: a ZeRO-3-style "shard the contraction dim over the data
+        # plane" fallback for non-divisible head counts was tried and
+        # REFUTED: GSPMD resolves the batch/weight same-axis conflict by
+        # replicating compute (5.6x FLOPs, see EXPERIMENTS.md SSPerf).
+        # Non-divisible head counts are instead handled by TP head
+        # padding in the model configs (n_heads_padded).
+        if last_is("embed") or last_is("unembed"):
+            spec[0] = m if self._div(shape[0], m) else None
+        elif name in ("wq", "wo"):
+            # (*, D, H, hd) or (*, H, hd, D): shard H
+            h_axis = nd - 3 + (1 if name == "wq" else 0)
+            if self._div(shape[h_axis], m):
+                spec[h_axis] = m
+        elif name in ("wk", "wv"):
+            h_axis = nd - 2
+            if self._div(shape[h_axis], m):
+                spec[h_axis] = m
+        elif name in ("wuk", "wuv", "wuq"):
+            h_axis = nd - 2
+            if self._div(shape[h_axis], m):
+                spec[h_axis] = m
+        elif name in ("wg", "wu", "wd"):
+            if self._moe_leaf(path, shape):
+                # EP over the *data* plane + TP(F) over model: expert
+                # weights are then fully sharded with NO per-use gathers
+                # (FSDP-gathering experts cost jamba ~5 TB/dev/step of
+                # all-gather; token all-to-alls are ~18x cheaper --
+                # EXPERIMENTS.md SSPerf cell 2)
+                e_axis = nd - 3  # (..., E, D, F) / (..., E, F, D)
+                f_axis = nd - 1 if name in ("wg", "wu") else nd - 2
+                d = self.data_axes
+                dsize = int(np.prod([self.axis_size(a) for a in d]))
+                # small experts (granite: 33 MB/layer) lose more to token
+                # all-to-alls than they save in gathers -- measured
+                # regression, so EP-over-data only above a size threshold
+                per_layer_bytes = int(np.prod(shape[-3:])) * 2
+                big = per_layer_bytes > (256 << 20)
+                if big and shape[e_axis] >= dsize \
+                        and shape[e_axis] % dsize == 0:
+                    spec[e_axis] = d if len(d) > 1 else d[0]
+                elif self._div(shape[e_axis], m):
+                    spec[e_axis] = m
+                if spec[e_axis] != m and spec[e_axis] is not None \
+                        and self._div(shape[f_axis], m):
+                    spec[f_axis] = m
+            else:  # dense MLP: shard the F dim
+                f_axis = nd - 1 if name in ("wg", "wu") else nd - 2
+                if self._div(shape[f_axis], m):
+                    spec[f_axis] = m
+        elif name == "router":
+            if self._div(shape[-1], m):
+                spec[nd - 1] = m
+        elif name in ("in_proj", "dt_proj"):  # (*, D|R, Di-ish)
+            if self._div(shape[-1], m):
+                spec[nd - 1] = m
+        elif name in ("x_proj", "out_proj", "A_log"):  # (*, Di, ...)
+            if self._div(shape[-2], m):
+                spec[nd - 2] = m
+        elif name in ("conv_w",):  # (*, K, Di)
+            if self._div(shape[-1], m):
+                spec[nd - 1] = m
+        elif name in ("conv_b", "dt_bias", "D_skip"):  # (*, Di)
+            if self._div(shape[-1], m):
+                spec[nd - 1] = m
+        # norms and everything else stay replicated
+
+        used: set = set()
+        for e in spec:
+            if e is not None:
+                used.update(e if isinstance(e, tuple) else (e,))
+        if self.fsdp and nd >= 2 and not (used & set(self.data_axes)):
+            free = [i for i, s in enumerate(spec) if s is None]
+            if free:
+                # biggest unsharded dim divisible by the data plane
+                dsize = int(np.prod([self.axis_size(a)
+                                     for a in self.data_axes]))
+                cands = [i for i in free
+                         if shape[i] >= dsize and shape[i] % dsize == 0]
+                if cands:
+                    i = max(cands, key=lambda j: shape[j])
+                    spec[i] = self.data_axes if len(self.data_axes) > 1 \
+                        else self.data_axes[0]
+        return P(*spec)
+
+    def _moe_leaf(self, path, shape) -> bool:
+        """Routed-expert tensor?  Transformer MoE experts live under 'ffn'
+        and are 4D when layer-stacked (L, E, D, F) -- dense stacked MLPs
+        are 3D (L, D, F) and shared experts sit under 'shared'.  Hybrid
+        MoE experts live under 'moe' and are 5D (G, n, E, D, F)."""
+        keys = set(path)
+        nd = len(shape)
+        if "shared" in keys:
+            return False
+        if "moe" in keys and nd >= 5:
+            return True
+        if "ffn" in keys and nd >= 4:
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def params_shardings(self, param_shapes):
+        """Pytree of NamedSharding matching a param_shapes pytree."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+        out = []
+        for path, leaf in flat:
+            keys = tuple(getattr(k, "key", str(k)) for k in path)
+            out.append(NamedSharding(self.mesh,
+                                     self.param_spec(keys, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def params_pspecs(self, param_shapes):
+        flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+        out = []
+        for path, leaf in flat:
+            keys = tuple(getattr(k, "key", str(k)) for k in path)
+            out.append(self.param_spec(keys, leaf.shape))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    def batch_spec(self) -> P:
+        d = self.data_axes
+        return P(d if len(d) > 1 else d[0])
+
+    def act_sharder(self):
+        """Callable pinning (B, S, D) activations to batch-over-data.
+
+        Applied inside every layer-scan body: GSPMD can otherwise drop
+        the batch sharding of the scan carry and replicate whole-batch
+        compute on every device (observed 16x on deepseek-v2 -- see
+        EXPERIMENTS.md SSPerf cell 3).
+        """
+        import jax
+        d = self.data_axes
+        daxis = d if len(d) > 1 else d[0]
+        dsize = int(np.prod([self.axis_size(a) for a in d]))
+        mesh = self.mesh
+
+        def shard(x):
+            if x.ndim < 2 or x.shape[0] < dsize or x.shape[0] % dsize:
+                return x
+            spec = P(daxis, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return shard
+
+    def act_spec(self) -> P:
+        d = self.data_axes
+        return P(d if len(d) > 1 else d[0], None, None)
+
+    def cache_spec(self, n_kv_heads: int, batch: int,
+                   stacked_dims: int = 1) -> P:
+        """Decode-cache spec for (L..., B, T, KV, hd) tensors.
+
+        Shards batch over data if divisible; KV heads over model if
+        divisible, else sequence over model (flash-decoding layout).
+        """
+        d = self.data_axes
+        dsize = int(np.prod([self.axis_size(a) for a in d]))
+        b_ax = d if len(d) > 1 else d[0]
+        lead = [None] * stacked_dims
+        b = b_ax if batch % dsize == 0 and batch >= dsize else None
+        if self._div(n_kv_heads, self.model_axis):
+            return P(*lead, b, None, self.model_axis, None)
+        return P(*lead, b, self.model_axis, None, None)
+
+    def latent_cache_spec(self, batch: int, stacked_dims: int = 1) -> P:
+        """(L, B, T, r) MLA latent cache: batch over data, T over model."""
+        d = self.data_axes
+        dsize = int(np.prod([self.axis_size(a) for a in d]))
+        b_ax = d if len(d) > 1 else d[0]
+        lead = [None] * stacked_dims
+        b = b_ax if batch % dsize == 0 and batch >= dsize else None
+        return P(*lead, b, self.model_axis, None)
+
+    def ssm_state_spec(self, batch: int, stacked_dims: int = 1) -> P:
+        """(L..., B, Di, N) SSM state: Di over model, batch over data."""
+        d = self.data_axes
+        dsize = int(np.prod([self.axis_size(a) for a in d]))
+        b_ax = d if len(d) > 1 else d[0]
+        lead = [None] * stacked_dims
+        b = b_ax if batch % dsize == 0 and batch >= dsize else None
+        return P(*lead, b, self.model_axis, None)
+
+    def conv_state_spec(self, batch: int, stacked_dims: int = 1) -> P:
+        """(L..., B, K-1, Di): Di over model."""
+        d = self.data_axes
+        dsize = int(np.prod([self.axis_size(a) for a in d]))
+        b_ax = d if len(d) > 1 else d[0]
+        lead = [None] * stacked_dims
+        b = b_ax if batch % dsize == 0 and batch >= dsize else None
+        return P(*lead, b, None, self.model_axis)

@@ -1,0 +1,145 @@
+"""Flash attention Pallas kernel (GQA, causal/sliding-window).
+
+The 32k-prefill roofline cells are attention-bound and the pure-JAX
+blockwise path (models/layers.py) round-trips its running max/sum/acc
+through HBM every KV block.  This kernel keeps them in VMEM scratch:
+
+  grid = (B, H, n_q_blocks, n_kv_blocks)   -- TPU iterates the minor-most
+  axis sequentially on-core, so the (m, l, acc) scratch carries across KV
+  blocks of one (batch, head, q-block) cell; the output tile is written
+  once on the last KV block.
+
+GQA is handled in the k/v BlockSpec index maps (q head h reads kv head
+h // group_size).  Causal + sliding-window masking is computed from
+global block offsets, and fully-masked KV blocks are skipped via
+``pl.when`` (the causal-skip optimization: ~2x fewer score FLOPs).
+
+Layouts: q/out (B, H, S, hd); k/v (B, KV, T, hd) -- ``ops.flash_attention``
+transposes from the model's (B, S, H, hd) convention and pads S/T to
+block multiples (padded KV masked by position).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 256
+BK = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, t_real: int,
+            n_kv: int, q_offset: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # queries occupy the LAST S positions of the T-long KV axis
+    q_idx = q_offset + iq * BQ \
+        + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    k_idx = ik * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+
+    # causal skip: a KV block strictly in the future contributes nothing
+    block_live = True
+    if causal:
+        block_live = (ik * BK) <= (q_offset + iq * BQ + BQ - 1)
+
+    @pl.when(block_live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)  # (BQ, hd)
+        k = k_ref[0, 0].astype(jnp.float32)  # (BK, hd)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+        mask = k_idx < t_real  # padded tail of KV
+        if causal:
+            mask &= k_idx <= q_idx
+        if window > 0:
+            mask &= k_idx > (q_idx - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "t_real", "q_offset", "interpret"))
+def _flash_padded(q, k, v, *, scale, causal, window, t_real, q_offset,
+                  interpret=True):
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = S // BQ, T // BK
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, t_real=t_real, n_kv=nk,
+                               q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, BQ, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, BK, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, BK, hd),
+                         lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, BQ, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ,), jnp.float32),   # running max m
+            pltpu.VMEM((BQ,), jnp.float32),   # running denom l
+            pltpu.VMEM((BQ, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Model-layout entry point.
+
+    q: (B, S, H, hd); k, v: (B, T, KV, hd).  Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    scale = scale or (1.0 / np.sqrt(hd))
+    qt = jnp.moveaxis(q, 2, 1)  # (B, H, S, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    ps, pt = (-S) % BQ, (-T) % BK
+    if ps:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    if pt:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pt), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pt), (0, 0)))
+    out = _flash_padded(qt, kt, vt, scale=scale, causal=causal,
+                        window=window, t_real=T, q_offset=T - S,
+                        interpret=interpret)
+    return jnp.moveaxis(out[:, :, :S], 1, 2)

@@ -1,0 +1,82 @@
+"""Gear CDC rolling-hash Pallas kernel.
+
+The sequential gear recurrence is a linear recurrence, so the hash is a
+32-tap windowed weighted sum (DESIGN.md S3):
+
+    h[t] = sum_{j=0..31} 2^j * gear[byte[t-j]]   (mod 2^32)
+
+Each grid cell computes TILE outputs from TILE + 31 input bytes.  Pallas
+BlockSpecs cannot express halos directly, so the kernel receives the data
+*twice* with shifted index maps -- the current tile and the previous tile
+-- and assembles the 31-byte halo from the previous tile's tail (masked to
+zero for the first tile, matching the reference's implicit zero-history).
+
+The gear-table lookup is a 256-entry VMEM gather (``jnp.take``); the
+shifted accumulation is 32 vector adds on uint32 lanes (VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.chunking import GEAR_TABLE, WINDOW
+
+TILE = 8192  # output bytes per grid cell
+
+_GEAR_I32 = GEAR_TABLE.view(np.int32)  # bit-identical reinterpret
+
+
+def _kernel(cur_ref, prev_ref, gear_ref, out_ref):
+    p = pl.program_id(0)
+    halo = WINDOW - 1
+    gear = gear_ref[...]  # (256,) uint32 (as int32 bits)
+    cur = cur_ref[...].astype(jnp.int32)  # (TILE,)
+    prev_tail = prev_ref[...][-halo:].astype(jnp.int32)  # (31,)
+
+    g_cur = jnp.take(gear, cur).astype(jnp.uint32)
+    g_prev = jnp.take(gear, prev_tail).astype(jnp.uint32)
+    # first tile has no history: its halo contributes nothing
+    g_prev = jnp.where(p == 0, jnp.uint32(0), g_prev)
+
+    ext = jnp.concatenate([g_prev, g_cur])  # (TILE + 31,) gear values
+    h = jnp.zeros((TILE,), jnp.uint32)
+    for j in range(WINDOW):
+        h = h + (jax.lax.dynamic_slice(ext, (halo - j,), (TILE,))
+                 << jnp.uint32(j))
+    out_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gear_hash_padded(data: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+    n = data.shape[0]
+    grid = (n // TILE,)
+    gear = jnp.asarray(_GEAR_I32).view(jnp.uint32)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda p: (p,)),
+            pl.BlockSpec((TILE,), lambda p: (jnp.maximum(p - 1, 0),)),
+            pl.BlockSpec((256,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint32),
+        interpret=interpret,
+    )(data, data, gear)
+
+
+def gear_hash(data, interpret: bool = True) -> jnp.ndarray:
+    """(N,) uint8 -> (N,) uint32 gear hash (kernel entry point)."""
+    data = jnp.asarray(data, jnp.uint8)
+    n = data.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    pad = (-n) % TILE
+    if pad:
+        data = jnp.pad(data, (0, pad))
+    return _gear_hash_padded(data, interpret=interpret)[:n]

@@ -1,0 +1,89 @@
+"""Public jit'd entry points for the SEARS compute kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled
+(``interpret=False``); everywhere else (this CPU container, tests) they run
+in interpret mode, which executes the same kernel body in Python for
+correctness.  ``impl='ref'`` selects the pure-jnp oracle -- useful both for
+differential testing and as an XLA-fusible fallback.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.kernels import flash_attn, gear_cdc, gf_matmul, ref, sha1
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------- GF matmul
+def rs_apply(M: np.ndarray, data, impl: str = "kernel") -> jnp.ndarray:
+    """Apply an (r,k) GF(256) coding matrix to (B, k, L) uint8 pieces.
+
+    RS encode: M = generator_matrix(n, k)  -> (B, n, L) code pieces.
+    RS decode: M = decode_matrix(n, k, received_idx) -> (B, k, L) data.
+    """
+    if impl == "ref":
+        return ref.gf_matmul_ref(jnp.asarray(M, jnp.uint8), data)
+    return gf_matmul.gf_matmul(M, data, interpret=not _on_tpu())
+
+
+def rs_encode(code, data, impl: str = "kernel") -> jnp.ndarray:
+    """Batched RS encode: (B, k, L) -> (B, n, L) using ``RSCode`` params."""
+    from repro.core.rs_code import generator_matrix
+    return rs_apply(generator_matrix(code.n, code.k), data, impl=impl)
+
+
+def rs_decode(code, pieces, indices, impl: str = "kernel") -> jnp.ndarray:
+    """Batched RS decode: (B, k, L) received pieces (+ their indices)."""
+    from repro.core.rs_code import decode_matrix
+    M = decode_matrix(code.n, code.k, tuple(int(i) for i in indices))
+    return rs_apply(M, pieces, impl=impl)
+
+
+# ------------------------------------------------------------------ gear ---
+def gear_hash(data, impl: str = "kernel") -> jnp.ndarray:
+    """(N,) uint8 -> (N,) uint32 CDC rolling hash."""
+    if impl == "ref":
+        return ref.gear_hash_ref(jnp.asarray(data, jnp.uint8))
+    return gear_cdc.gear_hash(data, interpret=not _on_tpu())
+
+
+# ----------------------------------------------------------- attention ----
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale=None):
+    """Fused GQA flash attention (Pallas; VMEM-resident running softmax).
+
+    Beyond-paper perf kernel for the attention-bound prefill cells: the
+    pure-JAX blockwise path round-trips (m, l, acc) through HBM per KV
+    block; this keeps them in VMEM scratch and skips fully-masked causal
+    blocks.  q: (B,S,H,hd); k,v: (B,T,KV,hd).
+    """
+    return flash_attn.flash_attention(q, k, v, causal=causal,
+                                      window=window, scale=scale,
+                                      interpret=not _on_tpu())
+
+
+# ------------------------------------------------------------------ sha1 ---
+def sha1_digests(chunks: list[bytes], impl: str = "kernel") -> list[bytes]:
+    """Batched SHA-1 of byte chunks -> 20-byte digests (device hot path)."""
+    if not chunks:
+        return []
+    blocks, counts = hashing.sha1_pad_batch(chunks)
+    if impl == "ref":
+        words = ref.sha1_ref(blocks, counts)
+    else:
+        words = sha1.sha1_digest_words(blocks, counts,
+                                       interpret=not _on_tpu())
+    return hashing.digest_words_to_bytes(np.asarray(words))
+
+
+def sha1_digest_words(blocks, counts, impl: str = "kernel") -> jnp.ndarray:
+    if impl == "ref":
+        return ref.sha1_ref(blocks, counts)
+    return sha1.sha1_digest_words(blocks, counts, interpret=not _on_tpu())

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics contracts: each kernel's test sweeps shapes/dtypes
+and asserts allclose (exact equality -- all kernels are integer) against
+these functions, which in turn are validated against independent host
+references (python GF tables, byte-at-a-time gear hash, hashlib SHA-1).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gf256
+from repro.core.chunking import GEAR_TABLE, WINDOW
+from repro.core.hashing import SHA1_H0, SHA1_K
+
+# ---------------------------------------------------------------------------
+# GF(256) matmul (Reed-Solomon encode/decode)
+# ---------------------------------------------------------------------------
+
+_GF_LOG = jnp.asarray(gf256.GF_LOG, dtype=jnp.int32)
+_GF_EXP = jnp.asarray(gf256.GF_EXP, dtype=jnp.int32)
+
+
+def gf_matmul_ref(M: jnp.ndarray, D: jnp.ndarray) -> jnp.ndarray:
+    """GF(256) matrix product via log/exp tables.
+
+    M: (r, k) uint8/int32 coding matrix.
+    D: (..., k, L) uint8 data pieces.
+    returns (..., r, L) uint8.
+    """
+    M = jnp.asarray(M, jnp.int32)
+    D = jnp.asarray(D, jnp.int32)
+    r, k = M.shape
+    out = jnp.zeros(D.shape[:-2] + (r, D.shape[-1]), dtype=jnp.int32)
+    for j in range(k):
+        m = M[:, j].reshape((1,) * (D.ndim - 2) + (r, 1))
+        d = D[..., j : j + 1, :]
+        prod = _GF_EXP[_GF_LOG[m] + _GF_LOG[d]]
+        prod = jnp.where((m == 0) | (d == 0), 0, prod)
+        out = out ^ prod
+    return out.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Gear CDC rolling hash
+# ---------------------------------------------------------------------------
+
+_GEAR = jnp.asarray(GEAR_TABLE.astype(np.int64), dtype=jnp.uint32)
+
+
+def gear_hash_ref(data: jnp.ndarray) -> jnp.ndarray:
+    """(N,) uint8 -> (N,) uint32 windowed gear hash (32-tap weighted sum)."""
+    data = jnp.asarray(data, jnp.int32)
+    g = _GEAR[data]
+    n = g.shape[0]
+    h = jnp.zeros_like(g)
+    for j in range(min(WINDOW, n)):
+        shifted = jnp.pad(g[: n - j], (j, 0)) << jnp.uint32(j)
+        h = h + shifted
+    return h
+
+
+# ---------------------------------------------------------------------------
+# SHA-1 (batched, padded-block input)
+# ---------------------------------------------------------------------------
+
+_H0 = jnp.asarray(SHA1_H0.astype(np.int64), dtype=jnp.uint32)
+_K = jnp.asarray(SHA1_K.astype(np.int64), dtype=jnp.uint32)
+
+
+def _rotl(x: jnp.ndarray, c: int) -> jnp.ndarray:
+    return (x << jnp.uint32(c)) | (x >> jnp.uint32(32 - c))
+
+
+def _sha1_block(h: jnp.ndarray, words: jnp.ndarray) -> jnp.ndarray:
+    """One SHA-1 compression. h: (..., 5) uint32, words: (..., 16) uint32."""
+    w = [words[..., t] for t in range(16)]
+    for t in range(16, 80):
+        w.append(_rotl(w[t - 3] ^ w[t - 8] ^ w[t - 14] ^ w[t - 16], 1))
+    a, b, c, d, e = (h[..., i] for i in range(5))
+    for t in range(80):
+        if t < 20:
+            f, k = (b & c) | (~b & d), _K[0]
+        elif t < 40:
+            f, k = b ^ c ^ d, _K[1]
+        elif t < 60:
+            f, k = (b & c) | (b & d) | (c & d), _K[2]
+        else:
+            f, k = b ^ c ^ d, _K[3]
+        tmp = _rotl(a, 5) + f + e + k + w[t]
+        e, d, c, b, a = d, c, _rotl(b, 30), a, tmp
+    return h + jnp.stack([a, b, c, d, e], axis=-1)
+
+
+def sha1_ref(blocks: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """Batched SHA-1 over padded message blocks.
+
+    blocks: (B, M, 16) uint32 big-endian words (from sha1_pad_batch).
+    counts: (B,) int32 number of real blocks per message.
+    returns (B, 5) uint32 digest words.
+    """
+    blocks = jnp.asarray(blocks, jnp.uint32)
+    counts = jnp.asarray(counts, jnp.int32)
+    B, M, _ = blocks.shape
+    h = jnp.broadcast_to(_H0, (B, 5)).astype(jnp.uint32)
+    for m in range(M):
+        upd = _sha1_block(h, blocks[:, m, :])
+        h = jnp.where((m < counts)[:, None], upd, h)
+    return h

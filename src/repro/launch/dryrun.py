@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell this lowers + compiles the
+appropriate step (train_step / prefill_step / serve_step) against
+ShapeDtypeStruct inputs on the production mesh (16x16 single pod and
+2x16x16 multi-pod), prints ``memory_analysis()`` / ``cost_analysis()``,
+and records the roofline terms (FLOPs, bytes, collective bytes) to JSON
+for EXPERIMENTS.md SS Dry-run / Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama32_1b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out results/dryrun.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, runnable_cells
+from repro.distributed.sharding import MeshRules
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.serve.step import build_decode_step, build_prefill_step
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainStepConfig, build_train_step
+
+# archs whose fp32 optimizer state cannot fit one pod: 8-bit moments
+INT8_MOMENT_ARCHS = {"jamba_15_large", "deepseek_v2_236b"}
+# archs whose bf16 params alone exceed HBM under model-axis TP: ZeRO-3/
+# FSDP param sharding over the data axes.  (coder/internlm are handled by
+# ZeRO-1 opt-state sharding + the non-divisible-heads data-plane fallback
+# -- full FSDP on them triggered GSPMD involuntary-remat pathologies, see
+# EXPERIMENTS.md SSPerf iteration log.)
+FSDP_ARCHS = {"jamba_15_large", "deepseek_v2_236b"}
+# per-arch microbatch counts for the train_4k global batch of 256
+# (jamba/dsv2 tuned down from 16 in SSPerf iterations)
+TRAIN_MICROBATCHES = {
+    "jamba_15_large": 8, "deepseek_v2_236b": 8, "deepseek_coder_33b": 8,
+    "internlm2_20b": 8, "falcon_mamba_7b": 8, "phi3_vision_4b": 4,
+    "whisper_tiny": 1, "gemma3_1b": 2, "llama32_1b": 2, "granite_moe_1b": 2,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = overrides or {}
+    rules = MeshRules(mesh, fsdp=overrides.get(
+        "fsdp", arch in FSDP_ARCHS))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tcfg = TrainStepConfig(
+            microbatches=overrides.get(
+                "microbatches", TRAIN_MICROBATCHES.get(arch, 4)),
+            adamw=AdamWConfig(moment_dtype=(
+                "int8" if arch in INT8_MOMENT_ARCHS else "fp32")),
+            remat=overrides.get("remat", True),
+            remat_policy=overrides.get(
+                "remat_policy",
+                # jamba: saving dot outputs beat full remat (SSPerf cell 2)
+                "dots" if arch == "jamba_15_large" else "nothing"))
+        step, in_sh, out_sh, param_shapes, opt_shapes = build_train_step(
+            cfg, rules, tcfg)
+        import jax.numpy as jnp
+        from repro.train import optimizer as opt
+        batch_specs = api.input_specs(cfg, shape)
+        resident_gb = analytical_memory_gb(
+            (in_sh[0], in_sh[1]), (param_shapes, opt_shapes), mesh)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(0, 1)).lower(
+                param_shapes, opt_shapes, batch_specs)
+    elif shape.kind == "prefill":
+        fn, in_sh, out_sh, param_shapes = build_prefill_step(cfg, rules,
+                                                             shape)
+        batch_specs = api.input_specs(cfg, shape)
+        cache_shapes = api.cache_specs(cfg, shape)
+        resident_gb = analytical_memory_gb(
+            (in_sh[0], out_sh[1]), (param_shapes, cache_shapes), mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                param_shapes, batch_specs)
+    else:  # decode
+        fn, in_sh, out_sh, cache_shapes = build_decode_step(cfg, rules,
+                                                            shape)
+        import jax.numpy as jnp
+        model = api.get_model(cfg)
+        param_shapes = model.param_shapes()
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        resident_gb = analytical_memory_gb(
+            (in_sh[0], in_sh[1]), (param_shapes, cache_shapes), mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                              donate_argnums=(1,)).lower(
+                param_shapes, cache_shapes, token, pos)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # post-SPMD HLO shapes are per-device; trip-count-weighted totals are
+    # per-device per step -> whole-mesh totals scale by chip count
+    stats = analysis.analyze_hlo(hlo)
+    chips = mesh.devices.size
+    roof = analysis.Roofline(
+        flops=stats.flops * chips,
+        bytes_accessed=stats.bytes_traffic * chips,
+        coll_bytes=stats.coll_bytes * chips,
+        chips=chips,
+        model_flops=analysis.model_flops(cfg, shape))
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "collectives": stats.coll_by_kind,
+        "n_collectives": stats.n_collectives,
+        "unknown_loops": stats.unknown_loops,
+        "resident_gb_per_chip": round(resident_gb, 3),
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed",
+                                                      0.0))},
+        "memory_analysis": _mem_dict(mem),
+        **roof.to_dict(),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {result['mesh']} "
+              f"({chips} chips) ==")
+        print("memory_analysis:", result["memory_analysis"])
+        print("resident GB/chip (params+state+cache, sharded): "
+              f"{resident_gb:.2f}")
+        print("weighted HLO: flops/dev=%.3e bytes/dev=%.3e coll/dev=%.3e "
+              "(%d collectives, %d unknown loops)" %
+              (stats.flops, stats.bytes_traffic, stats.coll_bytes,
+               stats.n_collectives, stats.unknown_loops))
+        print("roofline: compute=%.4fs memory=%.4fs collective=%.4fs "
+              "bottleneck=%s useful=%.2f roofline_frac=%.3f" %
+              (roof.t_compute, roof.t_memory, roof.t_collective,
+               roof.bottleneck, roof.useful_flops_ratio,
+               roof.roofline_fraction))
+    return result
+
+
+def analytical_memory_gb(shardings_trees, shapes_trees, mesh) -> float:
+    """Per-device resident bytes of the step's persistent arrays
+    (params/opt-state/caches) under their actual shardings -- the
+    'does it fit' number, independent of CPU-backend compilation
+    artifacts like LICM-hoisted conversions."""
+    import numpy as np
+    total = 0
+    for sh_tree, shp_tree in zip(shardings_trees, shapes_trees):
+        shs = jax.tree.leaves(sh_tree,
+                              is_leaf=lambda x: hasattr(x, "spec"))
+        shps = jax.tree.leaves(shp_tree)
+        for sh, shp in zip(shs, shps):
+            n_shards = 1
+            for entry in sh.spec:
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    n_shards *= mesh.shape[a]
+            total += int(np.prod(shp.shape)) * shp.dtype.itemsize / n_shards
+    return total / 2**30
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("generated_code_size_in_bytes",
+                 "argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--microbatches", type=int)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat-policy", default="")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.microbatches:
+        overrides["microbatches"] = args.microbatches
+    if args.no_fsdp:
+        overrides["fsdp"] = False
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+
+    if args.all:
+        cells = runnable_cells()
+    else:
+        cells = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results, failures = [], []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                results.append(lower_cell(arch, shape, multi_pod=mp,
+                                          overrides=overrides))
+            except Exception as e:  # noqa: BLE001 -- report, keep going
+                traceback.print_exc()
+                failures.append({"arch": arch, "shape": shape,
+                                 "multi_pod": mp, "error": repr(e)})
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f).get("results", [])
+        keyf = lambda r: (r["arch"], r["shape"], r["mesh"])  # noqa: E731
+        seen = {keyf(r) for r in results}
+        merged = results + [r for r in existing if keyf(r) not in seen]
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"results": merged, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells compiled OK, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("FAILED:", f_)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

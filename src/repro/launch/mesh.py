@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) -- the pod axis is
+pure data parallelism across the cross-pod (DCN/ICI-bridge) links; TP/EP
+stay inside a pod.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch jax device state -- the dry-run sets
+``xla_force_host_platform_device_count`` before first jax init, and smoke
+tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (CPU: 1 device) as a (data, model) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

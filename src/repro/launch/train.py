@@ -1,0 +1,80 @@
+"""Training launcher.
+
+Local run (this host's devices):
+  PYTHONPATH=src python -m repro.launch.train --arch llama32_1b --tiny \
+      --steps 20
+
+Production submission (per-host; jax.distributed picks up the pod slice):
+  python -m repro.launch.train --arch jamba_15_large --coordinator
+      <host:port> --num-hosts 64 --host-id $SLURM_PROCID ...
+
+The launcher builds the mesh (host mesh locally, 16x16 or 2x16x16 in
+production), constructs the SEARS-checkpointed Trainer and runs it.  The
+same entry point is what the multi-pod dry-run lowers, so a config that
+passes the dry-run launches unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--int8-moments", action="store_true")
+    ap.add_argument("--async-ckpt", action="store_true")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="16x16 mesh (requires 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--coordinator", default="")
+    ap.add_argument("--num-hosts", type=int, default=1)
+    ap.add_argument("--host-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        import jax
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_hosts,
+                                   process_id=args.host_id)
+
+    from repro.checkpoint.manager import SEARSCheckpointManager
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.tiny:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab_size=cfg.vocab_size)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=args.ckpt_every,
+        async_checkpoint=args.async_ckpt,
+        step_cfg=TrainStepConfig(
+            microbatches=args.microbatches,
+            adamw=AdamWConfig(lr=args.lr, moment_dtype=(
+                "int8" if args.int8_moments else "fp32"))))
+    manager = SEARSCheckpointManager(run=cfg.name, node_capacity=16 << 30)
+    trainer = Trainer(cfg, dcfg, tcfg, mesh=mesh, manager=manager)
+    trainer.run(on_step=lambda s, m: print(
+        f"step {s:6d}  loss {m['loss']:.4f}  gnorm {m['grad_norm']:.3f}"))
+    print("final metrics:", trainer.metrics[-1] if trainer.metrics else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Uniform model interface: family dispatch, input specs, param counts.
+
+Every model exposes: init / param_shapes / forward / loss / init_cache /
+prefill / decode_step.  ``input_specs`` builds the ShapeDtypeStruct
+stand-ins for a (model, shape) cell -- the dry-run lowers against these
+without allocating anything.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.mamba import MambaLM
+from repro.models.transformer import TransformerLM
+
+
+def get_model(cfg: ModelConfig, remat: bool = True, shard_act=None,
+              remat_policy=None):
+    kw = dict(remat=remat, shard_act=shard_act, remat_policy=remat_policy)
+    if cfg.family == "ssm":
+        return MambaLM(cfg, **kw)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg, **kw)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg, **kw)
+    return TransformerLM(cfg, **kw)  # dense | moe | vlm
+
+
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "decode":
+        specs = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return specs
+    specs = {"tokens": tok}
+    if cfg.family == "vlm":
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                batch_override: int | None = None):
+    """ShapeDtypeStructs of the decode cache for a decode cell."""
+    B = batch_override or shape.global_batch
+    T = shape.seq_len
+    if cfg.family == "vlm":
+        T += cfg.n_patches  # cache covers prepended patch positions
+    model = get_model(cfg)
+    if cfg.family == "encdec":
+        return jax.eval_shape(lambda: model.init_cache(B, T, enc_len=T))
+    return jax.eval_shape(lambda: model.init_cache(B, T))
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, rng: np.random.Generator,
+               batch_override: int | None = None) -> dict:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape, batch_override)
+    out = {}
+    for name, spec in specs.items():
+        if spec.dtype == jnp.int32:
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=spec.shape), jnp.int32)
+        else:
+            out[name] = jnp.asarray(
+                rng.normal(size=spec.shape), jnp.bfloat16)
+    return out
+
+
+# ---------------------------------------------------------------------------
+def param_count(cfg: ModelConfig) -> int:
+    """Real (non-pad) parameter count -- TP head padding excluded."""
+    import dataclasses
+    if cfg.n_heads_padded or cfg.n_kv_heads_padded:
+        cfg = dataclasses.replace(cfg, n_heads_padded=0,
+                                  n_kv_heads_padded=0)
+    shapes = get_model(cfg).param_shapes()
+    return int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+
+
+def _routed_expert_params(cfg: ModelConfig, shapes) -> int:
+    """Total parameters living inside routed-expert weight tensors."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [getattr(k, "key", "") for k in path]
+        if any(k in ("wg", "wu", "wd") for k in keys):
+            # routed experts are the 3D (E, D, F)-family tensors (plus a
+            # stacked layer dim); dense MLP weights are 2D (+ layer dim)
+            if leaf.shape[-3:-2] == (cfg.n_experts,):
+                total += int(np.prod(leaf.shape))
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k of routed experts)."""
+    import dataclasses
+    if cfg.n_heads_padded or cfg.n_kv_heads_padded:
+        cfg = dataclasses.replace(cfg, n_heads_padded=0,
+                                  n_kv_heads_padded=0)
+    shapes = get_model(cfg).param_shapes()
+    total = int(sum(np.prod(s.shape) for s in jax.tree.leaves(shapes)))
+    if not cfg.n_experts:
+        return total
+    routed = _routed_expert_params(cfg, shapes)
+    active_frac = cfg.experts_per_token / cfg.n_experts
+    return int(total - routed + routed * active_frac)

@@ -1,0 +1,212 @@
+"""Hybrid attention/SSM MoE LM (jamba-1.5-large).
+
+Pattern (cfg.attn_every = 8): each scan group is 8 layers -- layer 0 is
+GQA attention, layers 1..7 are Mamba-1 mixers; the FFN alternates dense
+MLP (even in-group index) and 16-expert top-2 MoE (odd index), giving
+MoE on every other layer (cfg.moe_every = 2).  ``lax.scan`` runs over the
+9 groups; the 8-layer pattern is unrolled inside the scan body.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLM:
+    cfg: Any
+    remat: bool = True
+    shard_act: Any = None
+    remat_policy: Any = None
+
+    @property
+    def n_groups(self) -> int:
+        return self.cfg.n_layers // self.cfg.attn_every
+
+    @property
+    def mamba_per_group(self) -> int:
+        return self.cfg.attn_every - 1
+
+    @property
+    def ffn_half(self) -> int:
+        return self.cfg.attn_every // 2
+
+    # ------------------------------------------------------------- init ----
+    def _group_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        m = self.mamba_per_group
+        h = self.ffn_half
+        return {
+            "attn_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "attn": L.gqa_init(ks[0], cfg),
+            "mamba": jax.vmap(lambda k: {
+                "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "mixer": L.mamba_init(k, cfg)})(jax.random.split(ks[1], m)),
+            "mlp": jax.vmap(lambda k: {
+                "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "p": L.mlp_init(k, cfg.d_model, cfg.d_ff, cfg.act)})(
+                    jax.random.split(ks[2], h)),
+            "moe": jax.vmap(lambda k: {
+                "ln": jnp.zeros((cfg.d_model,), jnp.float32),
+                "p": L.moe_init(k, cfg)})(jax.random.split(ks[3], h)),
+        }
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3)
+        return {
+            "embed": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "groups": jax.vmap(self._group_init)(
+                jax.random.split(ks[1], self.n_groups)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+            "unembed": L.dense_init(ks[2], (cfg.vocab_size, cfg.d_model)),
+        }
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def _logits(self, params, x):
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        return jnp.einsum("bsd,vd->bsv", x, params["unembed"])
+
+    # ------------------------------------------------------- group body ----
+    def _ffn(self, x, g, i):
+        """FFN for in-group layer i: even -> dense MLP, odd -> MoE."""
+        cfg = self.cfg
+        if i % 2 == 0:
+            sub = jax.tree.map(lambda a: a[i // 2], g["mlp"])
+            h = L.rms_norm(x, sub["ln"], cfg.norm_eps)
+            return x + L.mlp(h, sub["p"], cfg.act)
+        sub = jax.tree.map(lambda a: a[(i - 1) // 2], g["moe"])
+        h = L.rms_norm(x, sub["ln"], cfg.norm_eps)
+        return x + L.moe(h, sub["p"], cfg)
+
+    def _group_fwd(self, x, g, q_pos, kv_pos, attn_kv=None, ssm_state=None):
+        """Run one 8-layer group.  Returns (x, new_attn_kv, new_ssm_state).
+
+        attn_kv: None (compute fresh from x: train/prefill) or (k, v) cache.
+        ssm_state: None or (h (7,B,Di,N), conv (7,B,K-1,Di)).
+        """
+        cfg = self.cfg
+        # --- layer 0: attention ---
+        h = L.rms_norm(x, g["attn_ln"], cfg.norm_eps)
+        if attn_kv is None:
+            k, v = L.gqa_project_kv(h, g["attn"], cfg, kv_pos)
+        else:
+            k, v = attn_kv
+        x = x + L.gqa_attend(h, g["attn"], cfg, k=k, v=v, q_pos=q_pos,
+                             kv_pos=kv_pos)
+        x = self._ffn(x, g, 0)
+        new_kv = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+        # --- layers 1..7: mamba ---
+        hs, convs = [], []
+        for i in range(1, cfg.attn_every):
+            sub = jax.tree.map(lambda a: a[i - 1], g["mamba"])
+            hn = L.rms_norm(x, sub["ln"], cfg.norm_eps)
+            if ssm_state is None:
+                y, h_fin, conv_tail = L.mamba_scan(hn, sub["mixer"], cfg)
+            else:
+                y, h_fin, conv_tail = L.mamba_step(
+                    hn, sub["mixer"], cfg, ssm_state[0][i - 1],
+                    ssm_state[1][i - 1])
+            x = x + y
+            x = self._ffn(x, g, i)
+            hs.append(h_fin)
+            convs.append(conv_tail)
+        new_ssm = (jnp.stack(hs), jnp.stack(convs))
+        return x, new_kv, new_ssm
+
+    # ---------------------------------------------------------- forward ----
+    def _backbone(self, params, batch):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(xc, g):
+            if self.shard_act:
+                xc = self.shard_act(xc)
+            xc, _, _ = self._group_fwd(xc, g, pos, pos)
+            return xc, None
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["groups"])
+        return x
+
+    def forward(self, params, batch):
+        return self._logits(params, self._backbone(params, batch))
+
+    def loss(self, params, batch):
+        from repro.models.losses import chunked_ce
+        x = self._backbone(params, batch)
+        return chunked_ce(x, params["unembed"], params["final_norm"],
+                          batch["tokens"], self.cfg.norm_eps)
+
+    # ------------------------------------------------------------ cache ----
+    def init_cache(self, B, T):
+        cfg = self.cfg
+        G, M = self.n_groups, self.mamba_per_group
+        return {
+            "k": jnp.zeros((G, B, T, cfg.kv_store, cfg.head_dim),
+                           jnp.bfloat16),
+            "v": jnp.zeros((G, B, T, cfg.kv_store, cfg.head_dim),
+                           jnp.bfloat16),
+            "h": jnp.zeros((G, M, B, cfg.d_inner, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros((G, M, B, cfg.ssm_conv - 1, cfg.d_inner),
+                              jnp.float32),
+        }
+
+    def prefill(self, params, batch, cache_len=None):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        B, S = x.shape[:2]
+        T = cache_len or S
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(xc, g):
+            xc, kv, ssm = self._group_fwd(xc, g, pos, pos)
+            return xc, (kv, ssm)
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, (kvs, ssms) = jax.lax.scan(body, x, params["groups"])
+        pad = ((0, 0), (0, 0), (0, T - S), (0, 0), (0, 0))
+        cache = {"k": jnp.pad(kvs[0], pad), "v": jnp.pad(kvs[1], pad),
+                 "h": ssms[0], "conv": ssms[1]}
+        return self._logits(params, x[:, -1:, :])[:, 0], cache
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0)
+        T = cache["k"].shape[2]
+        q_pos = jnp.asarray(pos, jnp.int32).reshape(1)
+        kv_pos = jnp.arange(T, dtype=jnp.int32)
+
+        def body(xc, layer):
+            g, ck, cv, h, conv = layer
+            hn = L.rms_norm(xc, g["attn_ln"], cfg.norm_eps)
+            k_new, v_new = L.gqa_project_kv(hn, g["attn"], cfg, q_pos)
+            ck = jax.lax.dynamic_update_slice(
+                ck, k_new.astype(ck.dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v_new.astype(cv.dtype), (0, pos, 0, 0))
+            xc, _, ssm = self._group_fwd(
+                xc, g, q_pos, kv_pos, attn_kv=(ck, cv), ssm_state=(h, conv))
+            return xc, (ck, cv, ssm[0], ssm[1])
+
+        x, (cks, cvs, hs, convs) = jax.lax.scan(
+            body, x, (params["groups"], cache["k"], cache["v"],
+                      cache["h"], cache["conv"]))
+        cache = {"k": cks, "v": cvs, "h": hs, "conv": convs}
+        return self._logits(params, x)[:, 0], cache

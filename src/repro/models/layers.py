@@ -1,0 +1,511 @@
+"""Neural-net building blocks shared by the 10 assigned architectures.
+
+Everything is a pure function over explicit param pytrees (no framework):
+RMSNorm, RoPE, GQA attention (direct einsum + blockwise/flash-style path
+for long sequences), MLA latent attention (naive train path + absorbed
+decode path), SwiGLU/GELU MLPs, capacity-based dense-dispatch MoE, and the
+Mamba-1 selective SSM block (chunked associative scan + O(1) decode step).
+
+Precision policy: parameters/activations in bf16, softmax/norm/router in
+fp32, SSM state in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+# direct-einsum attention is used when the per-head score tensor is small;
+# beyond this, the blockwise (flash-style) path bounds the transient.
+ATTN_DIRECT_LIMIT = 4096 * 4096
+ATTN_BLOCK_Q = 1024
+ATTN_BLOCK_KV = 1024
+SSM_CHUNK = 64
+
+NEG_INF = -1e30
+
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.bfloat16):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) \
+        + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding, half-split convention.
+
+    x: (B, S, H, d) with d even; positions: (S,) or (B, S) int32.
+    """
+    d = x.shape[-1]
+    inv = 1.0 / (theta ** (np.arange(0, d, 2, dtype=np.float32) / d))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (S, d/2) | (B,S,d/2)
+    if ang.ndim == 2:  # (S, d/2) -> broadcast over batch
+        ang = ang[None]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+def _mask(q_pos, kv_pos, window, causal: bool):
+    """(S, T) bool mask from absolute positions.
+
+    ``window`` may be a traced scalar (per-layer local/global flags ride
+    through ``lax.scan``); window <= 0 means full attention.
+    """
+    m = jnp.ones(q_pos.shape + kv_pos.shape, dtype=bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    window = jnp.asarray(window)
+    in_window = kv_pos[None, :] > (q_pos[:, None] - window)
+    m &= in_window | (window <= 0)
+    return m
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              q_pos: jnp.ndarray, kv_pos: jnp.ndarray,
+              window: int = 0, causal: bool = True,
+              scale: float | None = None) -> jnp.ndarray:
+    """GQA attention. q: (B,S,H,dh); k,v: (B,T,KV,dv). Returns (B,S,H,dv).
+
+    Chooses direct einsum vs blockwise lazy-softmax by score-tensor size.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    scale = scale or (1.0 / np.sqrt(dh))
+    if S * T <= ATTN_DIRECT_LIMIT:
+        return _attention_direct(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                 window=window, causal=causal, scale=scale)
+    return _attention_blockwise(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                window=window, causal=causal, scale=scale)
+
+
+def _attention_direct(q, k, v, *, q_pos, kv_pos, window, causal, scale):
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _mask(q_pos, kv_pos, window, causal)  # (S, T)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+def _attention_blockwise(q, k, v, *, q_pos, kv_pos, window, causal, scale):
+    """Flash-style lazy softmax: map over Q blocks, scan over KV blocks.
+
+    Bounds the transient to (B, KV, G, Qb, Tb) regardless of sequence
+    length; used for the 32k prefill and 500k decode shapes.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    Qb, Tb = min(ATTN_BLOCK_Q, S), min(ATTN_BLOCK_KV, T)
+    nq, nt = -(-S // Qb), -(-T // Tb)
+    # pad S and T to block multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * Qb - S), (0, 0), (0, 0)))
+    qposp = jnp.pad(q_pos, (0, nq * Qb - S), constant_values=-(10 ** 9))
+    kp = jnp.pad(k, ((0, 0), (0, nt * Tb - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nt * Tb - T), (0, 0), (0, 0)))
+    kposp = jnp.pad(kv_pos, (0, nt * Tb - T), constant_values=10 ** 9)
+
+    kb = kp.reshape(B, nt, Tb, KV, dh)
+    vb = vp.reshape(B, nt, Tb, KV, dv)
+    kposb = kposp.reshape(nt, Tb)
+
+    def q_block(args):
+        qi, qpos_i = args  # (B, Qb, H, dh), (Qb,)
+        qg = qi.reshape(B, Qb, KV, G, dh)
+
+        def kv_step(carry, blk):
+            m, l, acc = carry
+            kj, vj, kpos_j = blk
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qg, kj,
+                           preferred_element_type=jnp.float32) * scale
+            msk = _mask(qpos_i, kpos_j, window, causal)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(vj.dtype), vj)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, Qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Qb, dv), v.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kposb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.moveaxis(out, 3, 1).reshape(B, Qb, H, dv)
+
+    qblocks = jnp.moveaxis(qp.reshape(B, nq, Qb, H, dh), 1, 0)
+    qposblk = qposp.reshape(nq, Qb)
+    out = jax.lax.map(q_block, (qblocks, qposblk))  # (nq, B, Qb, H, dv)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * Qb, H, dv)
+    return out[:, :S]
+
+
+# ------------------------------------------------------------------ MLP ----
+def mlp(x, p: Params, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    else:  # gelu
+        h = jax.nn.gelu(x @ p["wg"], approximate=True)
+    return h @ p["wd"]
+
+
+def mlp_init(key, d_model, d_ff, act: str = "swiglu", dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    p = {"wg": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+         "wd": dense_init(ks[2], (d_ff, d_model), dtype=dtype)}
+    if act == "swiglu":
+        p["wu"] = dense_init(ks[1], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+# ------------------------------------------------------------------ MoE ----
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "wg": dense_init(ks[1], (E, D, F), dtype=dtype),
+        "wu": dense_init(ks[2], (E, D, F), dtype=dtype),
+        "wd": dense_init(ks[3], (E, F, D), dtype=dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, cfg.n_shared_experts * F,
+                               dtype=dtype)
+    return p
+
+
+def moe(x: jnp.ndarray, p: Params, cfg) -> jnp.ndarray:
+    """Top-k MoE with capacity-based dense dispatch (TPU-idiomatic).
+
+    x: (B, S, D).  Tokens are reshaped into (G, M, D) groups
+    (M = cfg.moe_group_size) so the dispatch/combine tensors stay
+    (G, M, E, C) with C = ceil(M*k*cf/E) -- bounded VMEM per group and
+    einsum-only compute (no gathers on the hot path).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    N = B * S
+    M = min(cfg.moe_group_size, N)
+    pad = (-N) % M
+    xt = x.reshape(N, D)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    G = xt.shape[0] // M
+    xg = xt.reshape(G, M, D)
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gate_vals, idx = jax.lax.top_k(logits, K)  # (G, M, K)
+    gate_vals = jax.nn.softmax(gate_vals, axis=-1)
+
+    C = max(1, int(np.ceil(M * K * cfg.capacity_factor / E)))
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G, M, K, E)
+    # priority order: slot j of token m ranks before slot j of token m+1,
+    # and earlier slots of the same token rank first
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, K * M, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat  # position within expert
+    pos = pos_flat.reshape(G, K, M, E).transpose(0, 2, 1, 3)  # (G,M,K,E)
+    keep = (pos < C) & (onehot > 0)
+    # accumulate (G,M,E,C) dispatch/combine one top-k slot at a time: the
+    # naive formulation materializes a (G,M,K,E,C) one-hot -- K x the
+    # peak memory for zero extra information (EXPERIMENTS.md SSPerf cell 3)
+    dispatch = jnp.zeros((G, M, E, C), jnp.float32)
+    combine = jnp.zeros((G, M, E, C), jnp.float32)
+    for j in range(K):
+        pos_c = jax.nn.one_hot(pos[:, :, j].astype(jnp.int32), C,
+                               dtype=jnp.float32) \
+            * keep[:, :, j, :, None]  # (G, M, E, C)
+        slot = onehot[:, :, j, :, None] * pos_c
+        dispatch = dispatch + slot
+        combine = combine + gate_vals[:, :, j, None, None] * slot
+
+    db = dispatch.astype(jnp.bfloat16)
+    xe = jnp.einsum("gmec,gmd->gecd", db, xg)  # (G, E, C, D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    y = jnp.einsum("gmec,gecd->gmd", combine.astype(jnp.bfloat16), ye)
+
+    y = y.reshape(-1, D)[:N].reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp(x, p["shared"])
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------ GQA attn layer -----
+def head_mask(cfg) -> jnp.ndarray | None:
+    """(H_store,) 1/0 mask of real heads under TP head padding.
+
+    Real head r (original group kv=r//G, slot g=r%G) is stored at index
+    kv*G_store + g; everything else is a masked pad slot.
+    """
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    Hs, KVs = cfg.h_store, cfg.kv_store
+    if Hs == H and KVs == KV:
+        return None
+    G, Gs = H // KV, Hs // KVs
+    idx = np.arange(Hs)
+    real = ((idx % Gs) < G) & ((idx // Gs) < KV)
+    return jnp.asarray(real, jnp.float32)
+
+
+def gqa_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 4)
+    D, hd = cfg.d_model, cfg.head_dim
+    Hs, KVs = cfg.h_store, cfg.kv_store
+    p = {
+        "wq": dense_init(ks[0], (D, Hs, hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, KVs, hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, KVs, hd), dtype=dtype),
+        "wo": dense_init(ks[3], (Hs, hd, D), dtype=dtype),
+    }
+    hm = head_mask(cfg)
+    if hm is not None:  # zero the pad slots (outputs are masked anyway)
+        p["wq"] = p["wq"] * hm[None, :, None].astype(dtype)
+        p["wo"] = p["wo"] * hm[:, None, None].astype(dtype)
+        kvm = (jnp.arange(KVs) < cfg.n_kv_heads).astype(dtype)
+        p["wk"] = p["wk"] * kvm[None, :, None]
+        p["wv"] = p["wv"] * kvm[None, :, None]
+    return p
+
+
+def gqa_project_kv(x, p, cfg, positions):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_attend(x, p, cfg, *, k, v, q_pos, kv_pos, window=0, causal=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.use_rope:
+        q = rope(q, q_pos, cfg.rope_theta)
+    out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
+                    causal=causal)
+    hm = head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------- MLA ------
+def mla_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 8)
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr, qr = cfg.kv_lora_rank, cfg.q_lora_rank
+    p = {
+        "wdkv": dense_init(ks[0], (D, kvr), dtype=dtype),
+        "kv_norm": jnp.zeros((kvr,), jnp.float32),
+        "wuk": dense_init(ks[1], (kvr, H, dn), dtype=dtype),
+        "wuv": dense_init(ks[2], (kvr, H, dv), dtype=dtype),
+        "wkr": dense_init(ks[3], (D, dr), dtype=dtype),
+        "wo": dense_init(ks[4], (H, dv, D), dtype=dtype),
+    }
+    if qr:
+        p["wdq"] = dense_init(ks[5], (D, qr), dtype=dtype)
+        p["q_norm"] = jnp.zeros((qr,), jnp.float32)
+        p["wuq"] = dense_init(ks[6], (qr, H, dn + dr), dtype=dtype)
+    else:
+        p["wq"] = dense_init(ks[7], (D, H, dn + dr), dtype=dtype)
+    return p
+
+
+def mla_queries(x, p, cfg, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "wdq" in p:
+        qc = rms_norm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qc, p["wuq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(x, p, cfg, positions):
+    """Per-token latent cache entries: (c_kv, k_rope)."""
+    c = rms_norm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,kvr)
+    kr = rope((x @ p["wkr"])[:, :, None, :], positions, cfg.rope_theta)
+    return c, kr[:, :, 0, :]  # (B,S,kvr), (B,S,dr)
+
+
+def mla_attend_naive(x, p, cfg, *, c, k_rope, q_pos, kv_pos):
+    """Train/prefill path: expand latent to per-head K/V, standard MHA."""
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = mla_queries(x, p, cfg, q_pos)
+    k_nope = jnp.einsum("btr,rhk->bthk", c, p["wuk"])
+    v = jnp.einsum("btr,rhk->bthk", c, p["wuv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (dr,))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                    scale=1.0 / np.sqrt(dn + dr))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_attend_absorbed(x, p, cfg, *, c, k_rope, q_pos, kv_pos):
+    """Decode path: queries absorbed into latent space; attention runs
+    against the compressed (kv_lora + rope) cache directly -- the MLA
+    serving win (cache is 576 B/token instead of H*(dn+dv))."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = mla_queries(x, p, cfg, q_pos)
+    q_c = jnp.einsum("bshn,rhn->bshr", q_nope, p["wuk"])  # absorb W_uk
+    scores = (jnp.einsum("bshr,btr->bhst", q_c.astype(jnp.float32),
+                         c.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32)))
+    scores = scores / np.sqrt(dn + dr)
+    mask = _mask(q_pos, kv_pos, 0, True)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", pr.astype(c.dtype), c)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, p["wuv"])  # expand with W_uv
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------- Mamba ----
+def mamba_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 7)
+    D, Di, N, K, R = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv,
+                      cfg.dt_rank)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * Di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (K, Di), scale=0.1, dtype=jnp.float32),
+        "conv_b": jnp.zeros((Di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (Di, R + 2 * N), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (R, Di), scale=0.1, dtype=jnp.float32),
+        "dt_bias": jnp.full((Di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D_skip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (Di, D), dtype=dtype),
+    }
+
+
+def _mamba_inputs(x, p, cfg, conv_state=None):
+    """Shared projections. Returns (x_conv, z, dt, Bp, Cp, new_conv_state)."""
+    K = cfg.ssm_conv
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B,S,Di)
+    if conv_state is None:
+        hist = jnp.pad(x_in, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        hist = jnp.concatenate([conv_state.astype(x_in.dtype), x_in], axis=1)
+    new_conv_state = hist[:, hist.shape[1] - (K - 1):, :].astype(jnp.float32)
+    xf = hist.astype(jnp.float32)
+    conv = sum(xf[:, j:j + x_in.shape[1], :] * p["conv_w"][j]
+               for j in range(K)) + p["conv_b"]
+    x_conv = jax.nn.silu(conv).astype(x.dtype)  # (B,S,Di)
+
+    R, N = cfg.dt_rank, cfg.ssm_state
+    proj = x_conv @ p["x_proj"]  # (B,S,R+2N)
+    dt_r, Bp, Cp = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"]
+                         + p["dt_bias"])  # (B,S,Di) fp32
+    return x_conv, z, dt, Bp.astype(jnp.float32), Cp.astype(jnp.float32), \
+        new_conv_state
+
+
+def mamba_scan(x, p, cfg, h0=None, conv_state=None):
+    """Chunked selective scan. x: (B,S,D) -> (y, h_final, conv_tail).
+
+    Outer ``lax.scan`` over chunks of SSM_CHUNK tokens carries the state;
+    within a chunk an associative scan runs on the (B,c,Di,N) transient
+    (bounded; Di is TP-sharded at the model level).
+    """
+    B, S, D = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    x_conv, z, dt, Bp, Cp, conv_tail = _mamba_inputs(x, p, cfg, conv_state)
+    A = -jnp.exp(p["A_log"])  # (Di,N)
+
+    c = min(SSM_CHUNK, S)
+    pad = (-S) % c
+    if pad:
+        x_conv_p = jnp.pad(x_conv, ((0, 0), (0, pad), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp_p = jnp.pad(Bp, ((0, 0), (0, pad), (0, 0)))
+        Cp_p = jnp.pad(Cp, ((0, 0), (0, pad), (0, 0)))
+    else:
+        x_conv_p, dt_p, Bp_p, Cp_p = x_conv, dt, Bp, Cp
+    nc = x_conv_p.shape[1] // c
+
+    cdt = jnp.bfloat16 if cfg.ssm_compute_dtype == "bf16" else jnp.float32
+
+    def chunk(h, blk):
+        xc, dtc, Bc, Cc = blk  # (B,c,Di) (B,c,Di) (B,c,N) (B,c,N)
+        a = jnp.exp(dtc[..., None] * A).astype(cdt)  # (B,c,Di,N)
+        b = ((dtc * xc.astype(jnp.float32))[..., None]
+             * Bc[:, :, None, :]).astype(cdt)
+
+        def comb(l, r):
+            return (l[0] * r[0], r[0] * l[1] + r[1])
+
+        a_sc, b_sc = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = a_sc * h[:, None].astype(cdt) + b_sc  # (B,c,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, Cc.astype(cdt),
+                       preferred_element_type=jnp.float32)
+        return hs[:, -1].astype(jnp.float32), y
+
+    if h0 is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+    blocks = tuple(jnp.moveaxis(t.reshape(B, nc, c, -1), 1, 0)
+                   for t in (x_conv_p, dt_p, Bp_p, Cp_p))
+    h_fin, ys = jax.lax.scan(chunk, h0, blocks)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * c, Di)[:, :S]
+    y = y + p["D_skip"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], h_fin, conv_tail
+
+
+def mamba_step(x, p, cfg, h, conv_state):
+    """Single-token decode. x: (B,1,D); h: (B,Di,N) fp32;
+    conv_state: (B, K-1, Di) fp32.  Returns (y, h_new, conv_state_new)."""
+    x_conv, z, dt, Bp, Cp, new_conv = _mamba_inputs(x, p, cfg, conv_state)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[:, 0, :, None] * A)  # (B,Di,N)
+    b = (dt[:, 0] * x_conv[:, 0].astype(jnp.float32))[..., None] \
+        * Bp[:, 0, None, :]
+    h_new = a * h + b
+    y = jnp.einsum("bdn,bn->bd", h_new, Cp[:, 0])[:, None, :]
+    y = y + p["D_skip"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], h_new, new_conv

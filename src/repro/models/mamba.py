@@ -1,0 +1,124 @@
+"""Pure-SSM LM (falcon-mamba-7b): a stack of Mamba-1 blocks.
+
+Attention-free: each layer is RMSNorm -> mamba block -> residual (mamba1
+has no separate FFN).  Decode state is O(1) per layer: the (Di, N) SSM
+state plus the (K-1, Di) conv tail -- which is why this family runs the
+``long_500k`` cell that full-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaLM:
+    cfg: Any
+    remat: bool = True
+    shard_act: Any = None
+    remat_policy: Any = None
+
+    def _layer_init(self, key):
+        return {"ln": jnp.zeros((self.cfg.d_model,), jnp.float32),
+                "mixer": L.mamba_init(key, self.cfg)}
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3)
+        params = {
+            "embed": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "layers": jax.vmap(self._layer_init)(
+                jax.random.split(ks[1], cfg.n_layers)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.dense_init(
+                ks[2], (cfg.vocab_size, cfg.d_model))
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    def _logits(self, params, x):
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        table = params.get("unembed", params["embed"])
+        return jnp.einsum("bsd,vd->bsv", x, table)
+
+    # ---------------------------------------------------------- forward ----
+    def _backbone(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+        def body(xc, p):
+            if self.shard_act:
+                xc = self.shard_act(xc)
+            h = L.rms_norm(xc, p["ln"], cfg.norm_eps)
+            y, _, _ = L.mamba_scan(h, p["mixer"], cfg)
+            return xc + y, None
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    def forward(self, params, batch):
+        return self._logits(params, self._backbone(params, batch))
+
+    def loss(self, params, batch):
+        from repro.models.losses import chunked_ce
+        x = self._backbone(params, batch)
+        table = params.get("unembed", params["embed"])
+        return chunked_ce(x, table, params["final_norm"], batch["tokens"],
+                          self.cfg.norm_eps)
+
+    # ------------------------------------------------------------ cache ----
+    def init_cache(self, B, T):
+        cfg = self.cfg
+        del T  # SSM state is O(1) in sequence length
+        return {
+            "h": jnp.zeros((cfg.n_layers, B, cfg.d_inner, cfg.ssm_state),
+                           jnp.float32),
+            "conv": jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1,
+                               cfg.d_inner), jnp.float32),
+        }
+
+    def prefill(self, params, batch, cache_len=None):
+        cfg = self.cfg
+        del cache_len
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+
+        def body(xc, p):
+            h = L.rms_norm(xc, p["ln"], cfg.norm_eps)
+            y, h_fin, conv_tail = L.mamba_scan(h, p["mixer"], cfg)
+            return xc + y, (h_fin, conv_tail)
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, (hs, convs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"h": hs, "conv": convs}
+        return self._logits(params, x[:, -1:, :])[:, 0], cache
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        del pos  # SSM decode is position-free
+        x = jnp.take(params["embed"], token, axis=0)
+
+        def body(xc, layer):
+            p, h, conv = layer
+            hn = L.rms_norm(xc, p["ln"], cfg.norm_eps)
+            y, h_new, conv_new = L.mamba_step(hn, p["mixer"], cfg, h, conv)
+            return xc + y, (h_new, conv_new)
+
+        x, (hs, convs) = jax.lax.scan(
+            body, x, (params["layers"], cache["h"], cache["conv"]))
+        return self._logits(params, x)[:, 0], {"h": hs, "conv": convs}

@@ -1,0 +1,259 @@
+"""Decoder-only transformer LM covering the dense / MoE / MLA /
+local-global / VLM-backbone families.
+
+Layers are parameter-stacked and driven by ``lax.scan`` (one compiled layer
+body regardless of depth -- keeps the 512-device dry-run HLO small).
+Per-layer heterogeneity (gemma3's 5 local : 1 global pattern) rides through
+the scan as a per-layer window array; MoE-vs-dense FFN and MLA-vs-GQA are
+config-static.
+
+The multimodal frontends are stubs per the assignment: ``patches``
+(image/audio embeddings at d_model) arrive precomputed via input_specs and
+are prepended to the token embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    cfg: Any  # ModelConfig
+    remat: bool = True
+    shard_act: Any = None  # activation-sharding hook (distributed runs)
+    remat_policy: Any = None  # jax.checkpoint policy (default: save nothing)
+
+    # ------------------------------------------------------------- init ----
+    def _layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        p = {"ln1": jnp.zeros((cfg.d_model,), jnp.float32),
+             "ln2": jnp.zeros((cfg.d_model,), jnp.float32)}
+        if cfg.use_mla:
+            p["attn"] = L.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = L.gqa_init(ks[0], cfg)
+        if cfg.n_experts:
+            p["ffn"] = L.moe_init(ks[1], cfg)
+        else:
+            p["ffn"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+        return p
+
+    def init(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 3)
+        params = {
+            "embed": L.dense_init(ks[0], (cfg.vocab_size, cfg.d_model)),
+            "layers": jax.vmap(self._layer_init)(
+                jax.random.split(ks[1], cfg.n_layers)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.dense_init(
+                ks[2], (cfg.vocab_size, cfg.d_model))
+        return params
+
+    def param_shapes(self):
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ------------------------------------------------------------ flags ----
+    def _windows(self) -> jnp.ndarray:
+        """Per-layer sliding-window size; 0 = full/global attention."""
+        cfg = self.cfg
+        idx = np.arange(cfg.n_layers)
+        if cfg.global_every:
+            is_global = (idx + 1) % cfg.global_every == 0
+        else:
+            is_global = np.ones_like(idx, dtype=bool)
+        win = np.where(is_global, 0, cfg.sliding_window)
+        return jnp.asarray(win, jnp.int32)
+
+    # ------------------------------------------------------------ embed ----
+    def _embed(self, params, tokens, patches=None):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if patches is not None:
+            x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params, x):
+        x = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        table = params.get("unembed", params["embed"])
+        return jnp.einsum("bsd,vd->bsv", x, table)
+
+    # ---------------------------------------------------------- forward ----
+    def _block(self, x, p, window, q_pos, kv_pos, k=None, v=None):
+        """One decoder layer; k/v given = use external (cached) KV."""
+        cfg = self.cfg
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cfg.use_mla:
+            if k is None:
+                c, kr = L.mla_latent(h, p["attn"], cfg, kv_pos)
+                att = L.mla_attend_naive(h, p["attn"], cfg, c=c, k_rope=kr,
+                                         q_pos=q_pos, kv_pos=kv_pos)
+            else:  # (c, kr) passed through k, v slots
+                att = L.mla_attend_absorbed(h, p["attn"], cfg, c=k, k_rope=v,
+                                            q_pos=q_pos, kv_pos=kv_pos)
+        else:
+            if k is None:
+                k, v = L.gqa_project_kv(h, p["attn"], cfg, kv_pos)
+            att = L.gqa_attend(h, p["attn"], cfg, k=k, v=v, q_pos=q_pos,
+                               kv_pos=kv_pos, window=window)
+        x = x + att
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts:
+            y = L.moe(h2, p["ffn"], cfg)
+        else:
+            y = L.mlp(h2, p["ffn"], cfg.act)
+        return x + y
+
+    def _backbone(self, params, batch):
+        """Full-sequence causal pass -> final hidden states (B,S_total,D)."""
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch.get("patches"))
+        S = x.shape[1]
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(xc, layer):
+            if self.shard_act:
+                xc = self.shard_act(xc)
+            p, window = layer
+            return self._block(xc, p, window, pos, pos), None
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, (params["layers"], self._windows()))
+        return x
+
+    def forward(self, params, batch):
+        """Full-sequence causal forward -> logits (B, S_total, V)."""
+        return self._logits(params, self._backbone(params, batch))
+
+    def loss(self, params, batch):
+        """Next-token CE, masked to text positions; chunked over the
+        sequence so (B,S,V) fp32 logits never materialize."""
+        from repro.models.losses import chunked_ce
+        x = self._backbone(params, batch)
+        tokens = batch["tokens"]
+        P = x.shape[1] - tokens.shape[1]  # prepended patch positions
+        table = params.get("unembed", params["embed"])
+        return chunked_ce(x, table, params["final_norm"], tokens,
+                          self.cfg.norm_eps, skip_prefix=P)
+
+    # ------------------------------------------------------------ cache ----
+    def init_cache(self, B, T):
+        cfg = self.cfg
+        Lz = cfg.n_layers
+        if cfg.use_mla:
+            return {
+                "c": jnp.zeros((Lz, B, T, cfg.kv_lora_rank), jnp.bfloat16),
+                "kr": jnp.zeros((Lz, B, T, cfg.qk_rope_head_dim), jnp.bfloat16),
+            }
+        return {
+            "k": jnp.zeros((Lz, B, T, cfg.kv_store, cfg.head_dim),
+                           jnp.bfloat16),
+            "v": jnp.zeros((Lz, B, T, cfg.kv_store, cfg.head_dim),
+                           jnp.bfloat16),
+        }
+
+    def prefill(self, params, batch, cache_len=None):
+        """Process the prompt; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch.get("patches"))
+        B, S = x.shape[:2]  # S includes prepended patch positions
+        T = max(cache_len or S, S)
+        pos = jnp.arange(S, dtype=jnp.int32)
+
+        def body(xc, layer):
+            p, window = layer
+            h = L.rms_norm(xc, p["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                c, kr = L.mla_latent(h, p["attn"], cfg, pos)
+                att = L.mla_attend_naive(h, p["attn"], cfg, c=c, k_rope=kr,
+                                         q_pos=pos, kv_pos=pos)
+                kv = (c.astype(jnp.bfloat16), kr.astype(jnp.bfloat16))
+            else:
+                k, v = L.gqa_project_kv(h, p["attn"], cfg, pos)
+                att = L.gqa_attend(h, p["attn"], cfg, k=k, v=v, q_pos=pos,
+                                   kv_pos=pos, window=window)
+                kv = (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+            xc = xc + att
+            h2 = L.rms_norm(xc, p["ln2"], cfg.norm_eps)
+            y = L.moe(h2, p["ffn"], cfg) if cfg.n_experts \
+                else L.mlp(h2, p["ffn"], cfg.act)
+            return xc + y, kv
+
+        if self.remat:
+            body = jax.checkpoint(
+                body, policy=self.remat_policy
+                or jax.checkpoint_policies.nothing_saveable)
+        x, kvs = jax.lax.scan(body, x, (params["layers"], self._windows()))
+        pad = ((0, 0), (0, 0), (0, T - x.shape[1]))
+        if cfg.use_mla:
+            cache = {"c": jnp.pad(kvs[0], pad + ((0, 0),)),
+                     "kr": jnp.pad(kvs[1], pad + ((0, 0),))}
+        else:
+            cache = {"k": jnp.pad(kvs[0], pad + ((0, 0), (0, 0))),
+                     "v": jnp.pad(kvs[1], pad + ((0, 0), (0, 0)))}
+        logits = self._logits(params, x[:, -1:, :])
+        return logits[:, 0], cache
+
+    def decode_step(self, params, cache, token, pos):
+        """One decode step. token: (B, 1) int32; pos: scalar int32 -- the
+        cache slot this token occupies.  Returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        T = (cache.get("k") if "k" in cache else cache["c"]).shape[2]
+        q_pos = pos[None].astype(jnp.int32) if jnp.ndim(pos) == 0 \
+            else jnp.asarray(pos, jnp.int32).reshape(1)
+        kv_pos = jnp.arange(T, dtype=jnp.int32)
+
+        def body(xc, layer):
+            if cfg.use_mla:
+                p, window, cc, ckr = layer
+                h = L.rms_norm(xc, p["ln1"], cfg.norm_eps)
+                c_new, kr_new = L.mla_latent(h, p["attn"], cfg, q_pos)
+                cc = jax.lax.dynamic_update_slice(
+                    cc, c_new.astype(cc.dtype), (0, pos, 0))
+                ckr = jax.lax.dynamic_update_slice(
+                    ckr, kr_new.astype(ckr.dtype), (0, pos, 0))
+                att = L.mla_attend_absorbed(h, p["attn"], cfg, c=cc,
+                                            k_rope=ckr, q_pos=q_pos,
+                                            kv_pos=kv_pos)
+                new_kv = (cc, ckr)
+            else:
+                p, window, ck, cv = layer
+                h = L.rms_norm(xc, p["ln1"], cfg.norm_eps)
+                k_new, v_new = L.gqa_project_kv(h, p["attn"], cfg, q_pos)
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k_new.astype(ck.dtype), (0, pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v_new.astype(cv.dtype), (0, pos, 0, 0))
+                att = L.gqa_attend(h, p["attn"], cfg, k=ck, v=cv,
+                                   q_pos=q_pos, kv_pos=kv_pos, window=window)
+                new_kv = (ck, cv)
+            xc = xc + att
+            h2 = L.rms_norm(xc, p["ln2"], cfg.norm_eps)
+            y = L.moe(h2, p["ffn"], cfg) if cfg.n_experts \
+                else L.mlp(h2, p["ffn"], cfg.act)
+            return xc + y, new_kv
+
+        if cfg.use_mla:
+            xs = (params["layers"], self._windows(), cache["c"], cache["kr"])
+        else:
+            xs = (params["layers"], self._windows(), cache["k"], cache["v"])
+        x, kvs = jax.lax.scan(body, x, xs)
+        cache = {"c": kvs[0], "kr": kvs[1]} if cfg.use_mla \
+            else {"k": kvs[0], "v": kvs[1]}
+        return self._logits(params, x)[:, 0], cache

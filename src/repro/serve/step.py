@@ -1,0 +1,113 @@
+"""Sharded prefill / decode step builders.
+
+Shapes semantics (assignment): ``decode_*`` lowers ``serve_step`` -- one
+new token against a KV cache of ``seq_len`` -- NOT ``train_step``;
+``prefill_*`` lowers the prompt pass that fills that cache.
+
+Cache sharding policy (DESIGN.md S6): batch over the data plane when it
+divides; KV heads over ``model`` when they divide (TP attention), else the
+*sequence* dim over ``model`` (flash-decoding layout -- the softmax over a
+sequence-sharded axis becomes a small cross-chip reduction, which is how
+the 500k-token cell fits).  SSM/conv states shard d_inner over ``model``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import MeshRules
+from repro.models import api
+
+
+def cache_shardings(cfg, cache_shapes, rules: MeshRules, batch: int):
+    """NamedShardings for a decode-cache pytree by leaf name."""
+    def per_leaf(path, leaf):
+        name = path[-1]
+        nd = len(leaf.shape)
+        if name in ("k", "v", "ek", "ev"):
+            kv = leaf.shape[-2]
+            spec = rules.cache_spec(kv, batch, stacked_dims=nd - 4)
+        elif name in ("c", "kr"):
+            spec = rules.latent_cache_spec(batch, stacked_dims=nd - 3)
+        elif name == "h":
+            spec = rules.ssm_state_spec(batch, stacked_dims=nd - 3)
+        elif name == "conv":
+            spec = rules.conv_state_spec(batch, stacked_dims=nd - 3)
+        else:
+            spec = P()
+        return NamedSharding(rules.mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = [per_leaf(tuple(getattr(k, "key", str(k)) for k in p), leaf)
+           for p, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build_prefill_step(cfg, rules: MeshRules, shape):
+    """Returns (fn, in_shardings, out_shardings).
+
+    fn(params, batch) -> (last-token logits (B, V), cache)
+    """
+    model = api.get_model(cfg, shard_act=rules.act_sharder())
+    B, S = shape.global_batch, shape.seq_len
+
+    def fn(params, batch):
+        if cfg.family == "encdec":
+            return model.prefill(params, batch, cache_len=S)
+        return model.prefill(params, batch, cache_len=S)
+
+    param_shapes = model.param_shapes()
+    param_sh = rules.params_shardings(param_shapes)
+    from repro.train.step import batch_shardings
+    batch_sh = batch_shardings(cfg, rules)
+    cache_shapes = api.cache_specs(cfg, shape)
+    cache_sh = cache_shardings(cfg, cache_shapes, rules, B)
+    logits_sh = _logits_sharding(cfg, rules, B)
+    return fn, (param_sh, batch_sh), (logits_sh, cache_sh), param_shapes
+
+
+def _logits_sharding(cfg, rules: MeshRules, batch: int):
+    """(B, V) logits: batch over data if divisible, V over model if
+    divisible (embedding is V-sharded only when that divides)."""
+    d = rules.data_axes
+    daxis = d if len(d) > 1 else d[0]
+    dsize = rules_dsize(rules)
+    b = daxis if batch >= dsize and batch % dsize == 0 else None
+    m = rules.model_axis
+    v = m if cfg.vocab_size % rules.axis_size(m) == 0 else None
+    return NamedSharding(rules.mesh, P(b, v))
+
+
+def build_decode_step(cfg, rules: MeshRules, shape):
+    """Returns (fn, in_shardings, out_shardings, donate).
+
+    fn(params, cache, token, pos) -> (logits (B, V), new cache)
+    The cache is donated: decode updates it in place at scale.
+    """
+    model = api.get_model(cfg, shard_act=rules.act_sharder())
+    B, T = shape.global_batch, shape.seq_len
+
+    def fn(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    param_shapes = model.param_shapes()
+    param_sh = rules.params_shardings(param_shapes)
+    cache_shapes = api.cache_specs(cfg, shape)
+    cache_sh = cache_shardings(cfg, cache_shapes, rules, B)
+    d = rules.data_axes
+    daxis = d if len(d) > 1 else d[0]
+    tok_sh = NamedSharding(rules.mesh,
+                           P(daxis if B % rules_dsize(rules) == 0 else None,
+                             None))
+    pos_sh = NamedSharding(rules.mesh, P())
+    logits_sh = _logits_sharding(cfg, rules, B)
+    in_sh = (param_sh, cache_sh, tok_sh, pos_sh)
+    out_sh = (logits_sh, cache_sh)
+    return fn, in_sh, out_sh, cache_shapes
+
+
+def rules_dsize(rules: MeshRules) -> int:
+    import numpy as np
+    return int(np.prod([rules.axis_size(a) for a in rules.data_axes]))

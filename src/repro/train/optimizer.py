@@ -1,0 +1,131 @@
+"""AdamW with mixed-precision master weights and quantized moments.
+
+Production memory layout at 16 GB/chip scale (DESIGN.md S6):
+
+* model params: bf16 (what the forward pass consumes)
+* master copy:  fp32, sharded like the params (plus FSDP if enabled)
+* moments m/v:  fp32 by default; ``moment_dtype='int8'`` switches to
+  block-wise 8-bit first moment + bf16 second moment (8-bit-Adam style;
+  a pure-int8 v underflows inside absmax blocks and explodes the update,
+  which our test suite reproduces) -- 62% less moment HBM, required to
+  fit jamba-398B on a single pod.
+
+The optimizer is a pure pytree transform: ``init(params) -> state``,
+``apply(state, grads) -> (state, new_bf16_params)``; everything maps
+cleanly through pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256  # block size for int8 moment quantization
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "fp32"  # fp32 | int8
+    grad_clip: float = 1.0
+
+
+# ----------------------------------------------------- int8 block quant ----
+# Shape-preserving block quantization along the last axis: ``q`` keeps the
+# (padded) parameter shape so the parameter's PartitionSpec applies to it
+# directly; ``scale`` is the per-block fp32 maximum.
+
+def _quantize(x: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    lead, last = x.shape[:-1], x.shape[-1]
+    pad = (-last) % QBLOCK
+    xp = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    blocks = xp.reshape(*lead, -1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0  # (*lead, nblk)
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return {"q": q.reshape(*lead, last + pad).astype(jnp.int8),
+            "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(d: dict[str, jnp.ndarray], shape) -> jnp.ndarray:
+    lead, last = shape[:-1], shape[-1]
+    qb = d["q"].reshape(*lead, -1, QBLOCK).astype(jnp.float32)
+    full = (qb * d["scale"][..., None]).reshape(*lead, -1)
+    return full[..., :last]
+
+
+# ------------------------------------------------------------- optimizer ---
+def init(params, cfg: AdamWConfig):
+    """params: bf16 model params. Returns optimizer state pytree."""
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+    def zeros_m(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _quantize(z) if cfg.moment_dtype == "int8" else z
+
+    def zeros_v(p):
+        dt = jnp.bfloat16 if cfg.moment_dtype == "int8" else jnp.float32
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": master,
+        "m": jax.tree.map(zeros_m, params),
+        "v": jax.tree.map(zeros_v, params),
+    }
+
+
+def state_shapes(param_shapes, cfg: AdamWConfig):
+    return jax.eval_shape(lambda p: init(p, cfg), param_shapes)
+
+
+def _global_norm(grads) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def apply(state, grads, cfg: AdamWConfig):
+    """One AdamW update.  Returns (new_state, new bf16 params)."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(master, m, v, g):
+        g = g.astype(jnp.float32) * clip
+        if cfg.moment_dtype == "int8":
+            m_f = _dequantize(m, master.shape)
+        else:
+            m_f = m
+        v_f = v.astype(jnp.float32)
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        mhat = m_f / (1 - cfg.b1 ** t)
+        vhat = v_f / (1 - cfg.b2 ** t)
+        new_master = master - cfg.lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master)
+        if cfg.moment_dtype == "int8":
+            m_out, v_out = _quantize(m_f), v_f.astype(jnp.bfloat16)
+        else:
+            m_out, v_out = m_f, v_f
+        return new_master, m_out, v_out
+
+    flat_master, tdef = jax.tree.flatten(state["master"])
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_g = tdef.flatten_up_to(grads)
+    out = [upd(mm, m, v, g)
+           for mm, m, v, g in zip(flat_master, flat_m, flat_v, flat_g)]
+    new_master = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(jnp.bfloat16), new_master)
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_state, new_params

@@ -1,0 +1,110 @@
+"""HLO analyzer validation: trip-count weighting against known programs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.analysis import analyze_hlo
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    stats = analyze_hlo(_hlo(lambda x, y: x @ y, a, b))
+    want = 2 * 128 * 256 * 512
+    assert stats.flops == want
+    assert stats.unknown_loops == 0
+
+
+def test_scan_multiplies_flops_by_trip_count():
+    L = 7
+    w = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fn(ws, x0):
+        def body(c, wi):
+            return c @ wi, None
+        out, _ = jax.lax.scan(body, x0, ws)
+        return out
+
+    stats = analyze_hlo(_hlo(fn, w, x))
+    want = L * 2 * 8 * 64 * 64
+    assert stats.flops == want, (stats.flops, want)
+    assert stats.unknown_loops == 0
+
+
+def test_nested_scan_weights_multiply():
+    Lo, Li = 3, 5
+    w = jax.ShapeDtypeStruct((Lo, Li, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+
+    def fn(ws, x0):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, wo)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x0, ws)
+        return out
+
+    stats = analyze_hlo(_hlo(fn, w, x))
+    want = Lo * Li * 2 * 4 * 32 * 32
+    assert stats.flops == want, (stats.flops, want)
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 8), jnp.float32)
+    stats = analyze_hlo(_hlo(lambda x, y: jnp.einsum("bik,bkj->bij", x, y),
+                             a, b))
+    want = 2 * 4 * 16 * 32 * 8
+    assert stats.flops == want
+
+
+def test_bytes_traffic_nonzero_and_sane():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    stats = analyze_hlo(_hlo(lambda x: (x + 1.0) * 2.0, a))
+    nbytes = 1024 * 1024 * 4
+    # read input + write output, possibly one fused op: in [2x, 6x]
+    assert 2 * nbytes <= stats.bytes_traffic <= 6 * nbytes
+
+
+def test_collectives_counted_under_mesh():
+    devs = jax.devices()
+    if len(devs) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1,), ("d",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    with mesh:
+        hlo = jax.jit(
+            lambda v: v.sum(),
+            in_shardings=NamedSharding(mesh, P("d")),
+        ).lower(x).compile().as_text()
+    stats = analyze_hlo(hlo)  # 1-device mesh: no collectives expected
+    assert stats.coll_bytes >= 0
+
+
+def test_while_loop_with_remat_still_counted():
+    """jax.checkpoint under scan: recompute adds dot flops."""
+    L = 4
+    w = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+    def fn(ws, x0):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        body = jax.checkpoint(body)
+        out, _ = jax.lax.scan(body, x0, ws)
+        return jnp.sum(out)
+
+    stats = analyze_hlo(_hlo(lambda ws, x0: jax.grad(
+        lambda w_, xx: fn(w_, xx))(ws, x0), w, x))
+    base = L * 2 * 8 * 64 * 64
+    # fwd + recompute + 2 bwd matmuls ~ 4x fwd; allow 3x..6x
+    assert 3 * base <= stats.flops <= 6 * base, (stats.flops, base)

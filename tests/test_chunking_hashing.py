@@ -1,0 +1,119 @@
+"""CDC chunking + SHA-1 hashing tests (oracle = byte-at-a-time / hashlib)."""
+
+import hashlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+from repro.core.chunking import (Chunker, gear_hash_np, gear_hash_sequential,
+                                 select_boundaries)
+
+
+def test_windowed_hash_matches_sequential():
+    rng = np.random.RandomState(0)
+    data = rng.randint(0, 256, size=4096, dtype=np.uint8)  # noqa: NPY002
+    np.testing.assert_array_equal(gear_hash_np(data), gear_hash_sequential(data))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.binary(min_size=1, max_size=2000))
+def test_windowed_hash_matches_sequential_property(blob):
+    data = np.frombuffer(blob, dtype=np.uint8)
+    np.testing.assert_array_equal(gear_hash_np(data), gear_hash_sequential(data))
+
+
+def _random_data(n, seed=0):
+    return np.random.RandomState(seed).randint(0, 256, size=n, dtype=np.uint8)  # noqa: NPY002
+
+
+def test_boundaries_cover_input_exactly():
+    chunker = Chunker()
+    data = _random_data(100_000)
+    cuts = chunker.boundaries(data)
+    assert cuts[-1] == 100_000
+    assert np.all(np.diff(cuts) > 0)
+
+
+def test_chunk_size_constraints():
+    chunker = Chunker()
+    data = _random_data(500_000, seed=1)
+    cuts = chunker.boundaries(data)
+    sizes = np.diff(np.concatenate([[0], cuts]))
+    assert sizes.max() <= chunker.max_size
+    # all but the final tail chunk respect min_size
+    assert np.all(sizes[:-1] >= chunker.min_size)
+    # average lands in a sane band around the 4 KB target
+    assert 2000 < sizes.mean() < 8192, sizes.mean()
+
+
+def test_chunking_is_content_defined_shift_robust():
+    """Inserting bytes at the front must not re-chunk the whole file."""
+    chunker = Chunker()
+    data = _random_data(200_000, seed=2)
+    shifted = np.concatenate([_random_data(137, seed=3), data])
+    ids_a = {hashlib.sha1(bytes(data[o:o + l])).digest()
+             for o, l in chunker.chunk_spans(data)}
+    ids_b = {hashlib.sha1(bytes(shifted[o:o + l])).digest()
+             for o, l in chunker.chunk_spans(shifted)}
+    overlap = len(ids_a & ids_b) / len(ids_a)
+    assert overlap > 0.85, overlap  # fixed-size chunking would give ~0
+
+
+def test_identical_regions_dedup():
+    chunker = Chunker()
+    block = _random_data(50_000, seed=4)
+    a = np.concatenate([block, _random_data(10_000, seed=5)])
+    b = np.concatenate([_random_data(10_000, seed=6), block])
+    ids_a = {hashlib.sha1(bytes(a[o:o + l])).digest()
+             for o, l in chunker.chunk_spans(a)}
+    ids_b = {hashlib.sha1(bytes(b[o:o + l])).digest()
+             for o, l in chunker.chunk_spans(b)}
+    assert len(ids_a & ids_b) >= 4
+
+
+def test_select_boundaries_max_size_forced():
+    # no candidates at all -> cuts every max_size
+    cuts = select_boundaries(np.array([], dtype=np.int64), 10_000, 1024, 4096)
+    assert list(cuts) == [4096, 8192, 10_000]
+
+
+def test_select_boundaries_respects_min():
+    cand = np.array([10, 1500, 5000], dtype=np.int64)
+    cuts = select_boundaries(cand, 6000, 1024, 8192)
+    assert cuts[0] == 1500  # 10 rejected (< min), 1500 accepted
+
+
+def test_empty_and_tiny_inputs():
+    chunker = Chunker()
+    assert len(chunker.boundaries(b"")) == 0
+    assert list(chunker.boundaries(b"x")) == [1]
+    assert chunker.chunk(b"hello") == [b"hello"]
+
+
+# ------------------------------------------------------------- hashing ----
+@settings(max_examples=30, deadline=None)
+@given(st.binary(min_size=0, max_size=300))
+def test_sha1_np_matches_hashlib(blob):
+    assert hashing.sha1_np(blob) == hashlib.sha1(blob).digest()
+
+
+def test_sha1_pad_blocks():
+    blocks = hashing.sha1_pad_blocks(b"abc")
+    assert blocks.shape == (1, 16)
+    assert blocks[0, 0] == int.from_bytes(b"abc\x80", "big")
+    assert blocks[0, 15] == 24  # bit length
+
+
+def test_sha1_pad_batch_counts():
+    blocks, counts = hashing.sha1_pad_batch([b"", b"x" * 55, b"x" * 56, b"x" * 200])
+    assert list(counts) == [1, 1, 2, 4]
+    assert blocks.shape == (4, 4, 16)
+
+
+@pytest.mark.parametrize("n", [0, 1, 55, 56, 63, 64, 65, 119, 120, 1000])
+def test_sha1_np_block_edges(n):
+    blob = bytes(range(256))[: n % 256] * (n // 256 + 1)
+    blob = blob[:n]
+    assert hashing.sha1_np(blob) == hashlib.sha1(blob).digest()

@@ -1,0 +1,64 @@
+"""Data pipeline tests: determinism, restart-reproducibility, host slicing."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import ByteCorpus, DataConfig, SyntheticCorpus, host_slice
+
+
+def _cfg(**kw):
+    base = dict(seq_len=16, global_batch=8, vocab_size=1000, seed=3)
+    base.update(kw)
+    return DataConfig(**base)
+
+
+def test_synthetic_restart_reproducible():
+    """Step k's batch is identical regardless of iteration history."""
+    a = SyntheticCorpus(_cfg())
+    b = SyntheticCorpus(_cfg())
+    for _ in range(5):
+        a.batch(np.random.randint(100))  # scramble "history"
+    np.testing.assert_array_equal(a.batch(7)["tokens"], b.batch(7)["tokens"])
+
+
+def test_synthetic_different_steps_differ():
+    c = SyntheticCorpus(_cfg())
+    assert not np.array_equal(c.batch(0)["tokens"], c.batch(1)["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_synthetic_tokens_in_range(step):
+    c = SyntheticCorpus(_cfg())
+    t = c.batch(step)["tokens"]
+    assert t.shape == (8, 16)
+    assert t.min() >= 0 and t.max() < 1000
+
+
+def test_host_slice_partitions_exactly():
+    c = SyntheticCorpus(_cfg())
+    b = c.batch(0)
+    parts = [host_slice(b, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), b["tokens"])
+
+
+def test_byte_corpus_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        p1 = os.path.join(d, "a.txt")
+        with open(p1, "wb") as f:
+            f.write(b"hello world, this is a test corpus " * 50)
+        cfg = _cfg(vocab_size=260)
+        corp = ByteCorpus(cfg, [p1])
+        b = corp.batch(0)["tokens"]
+        assert b.shape == (8, 16)
+        assert b.min() >= 0 and b.max() < 260
+        np.testing.assert_array_equal(b, ByteCorpus(cfg, [p1]).batch(0)["tokens"])
+
+
+def test_byte_corpus_empty_raises():
+    with pytest.raises(ValueError):
+        ByteCorpus(_cfg(), ["/nonexistent/path"])

@@ -1,0 +1,104 @@
+"""GF(2^8) field + Reed-Solomon codec unit & property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gf256
+from repro.core.rs_code import RSCode, decode_matrix, generator_matrix
+
+
+# ---------------------------------------------------------------- field ----
+def test_exp_log_roundtrip():
+    a = np.arange(1, 256)
+    assert np.all(gf256.GF_EXP[gf256.GF_LOG[a]] == a)
+
+
+def test_mul_identity_zero():
+    a = np.arange(256)
+    assert np.all(gf256.gf_mul(a, 1) == a)
+    assert np.all(gf256.gf_mul(a, 0) == 0)
+
+
+@given(st.integers(0, 255), st.integers(0, 255), st.integers(0, 255))
+def test_mul_associative_distributive(a, b, c):
+    assert gf256.gf_mul(gf256.gf_mul(a, b), c) == gf256.gf_mul(a, gf256.gf_mul(b, c))
+    assert gf256.gf_mul(a, b ^ c) == (gf256.gf_mul(a, b) ^ gf256.gf_mul(a, c))
+
+
+@given(st.integers(1, 255))
+def test_inverse(a):
+    assert gf256.gf_mul(a, gf256.gf_inv(a)) == 1
+
+
+def test_bitmatrix_matches_field_mul():
+    rng = np.random.RandomState(0)
+    for _ in range(32):
+        c = int(rng.randint(0, 256))
+        x = int(rng.randint(0, 256))
+        M = gf256.mul_bitmatrix(c)
+        bits = np.array([(x >> i) & 1 for i in range(8)])
+        out_bits = (M @ bits) % 2
+        out = int(sum(int(b) << i for i, b in enumerate(out_bits)))
+        assert out == int(gf256.gf_mul(c, x)), (c, x)
+
+
+def test_bits_roundtrip():
+    rng = np.random.RandomState(1)
+    x = rng.randint(0, 256, size=(3, 17), dtype=np.uint8)  # noqa: NPY002
+    assert np.array_equal(gf256.bits_to_bytes_np(gf256.bytes_to_bits_np(x)), x)
+
+
+def test_matrix_inverse():
+    rng = np.random.RandomState(2)
+    for n in (1, 2, 5, 8):
+        G = generator_matrix(2 * n, n)[n : 2 * n]  # Cauchy block, invertible
+        inv = gf256.gf_mat_inv(G)
+        assert np.array_equal(gf256.gf_matmul_np(inv, G), np.eye(n, dtype=np.int32))
+
+
+# ------------------------------------------------------------------ RS -----
+def test_generator_systematic():
+    G = generator_matrix(10, 5)
+    assert np.array_equal(G[:5], np.eye(5, dtype=np.int32))
+
+
+@pytest.mark.parametrize("n,k", [(10, 5), (10, 1), (10, 10), (6, 4), (14, 10)])
+def test_rs_roundtrip_all_k_subsets_sampled(n, k):
+    rng = np.random.RandomState(3)
+    code = RSCode(n, k)
+    data = rng.randint(0, 256, size=(k, 64), dtype=np.uint8)  # noqa: NPY002
+    pieces = code.encode(data)
+    assert np.array_equal(pieces[:k], data)  # systematic prefix
+    for _ in range(12):
+        idx = tuple(sorted(rng.choice(n, size=k, replace=False).tolist()))
+        rec = code.decode(pieces[list(idx)], idx)
+        assert np.array_equal(rec, data), idx
+
+
+def test_rs_mds_all_submatrices_invertible():
+    # MDS property: every k-subset of rows decodes (exhaustive for small code)
+    import itertools
+    n, k = 8, 4
+    for idx in itertools.combinations(range(n), k):
+        decode_matrix(n, k, idx)  # raises if singular
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=5000), st.integers(0, 10**6))
+def test_rs_bytes_roundtrip(blob, seed):
+    code = RSCode(10, 5)
+    pieces = code.encode_bytes(blob)
+    rng = np.random.RandomState(seed % 2**31)
+    keep = sorted(rng.choice(10, size=5, replace=False).tolist())
+    rec = code.decode_bytes({i: pieces[i] for i in keep}, len(blob))
+    assert rec == blob
+
+
+def test_rs_erasure_tolerance_boundary():
+    code = RSCode(10, 5)
+    blob = bytes(range(256)) * 7
+    pieces = code.encode_bytes(blob)
+    with pytest.raises(ValueError):
+        code.decode_bytes({i: pieces[i] for i in range(4)}, len(blob))
+    assert code.decode_bytes({i: pieces[i] for i in range(5, 10)}, len(blob)) == blob

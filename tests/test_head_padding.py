@@ -1,0 +1,97 @@
+"""TP head padding invariants: padded model == unpadded model exactly."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import TransformerLM
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64,
+                n_heads=6, n_kv_heads=2, d_ff=128, vocab_size=128,
+                head_dim=16)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_head_mask_layout():
+    cfg = _cfg(n_heads=6, n_kv_heads=2, n_heads_padded=8)
+    m = np.asarray(L.head_mask(cfg))
+    # G=3, G_store=4: real slots are g<3 within each of the 2 kv groups
+    assert m.tolist() == [1, 1, 1, 0, 1, 1, 1, 0]
+
+
+def test_head_mask_kv_padding():
+    cfg = _cfg(n_heads=4, n_kv_heads=4, n_heads_padded=8,
+               n_kv_heads_padded=8)
+    m = np.asarray(L.head_mask(cfg))
+    # G=1, G_store=1: kv groups 0..3 real, 4..7 pad
+    assert m.tolist() == [1, 1, 1, 1, 0, 0, 0, 0]
+
+
+def test_padded_model_matches_unpadded():
+    """Copying real weights into a padded layout must not change logits."""
+    cfg_u = _cfg()
+    cfg_p = _cfg(n_heads_padded=8)
+    mu = TransformerLM(cfg_u, remat=False)
+    mp = TransformerLM(cfg_p, remat=False)
+    pu = mu.init(jax.random.PRNGKey(0))
+    pp = mp.init(jax.random.PRNGKey(1))
+
+    # embed real head slots of pu into pp's padded layout
+    G, Gs, KV = 3, 4, 2
+    def embed_wq(wq_u, wq_p):  # (L, D, H, hd) -> (L, D, Hs, hd)
+        out = jnp.zeros_like(wq_p)
+        for kv in range(KV):
+            out = out.at[:, :, kv * Gs:kv * Gs + G].set(
+                wq_u[:, :, kv * G:(kv + 1) * G])
+        return out
+    def embed_wo(wo_u, wo_p):  # (L, H, hd, D)
+        out = jnp.zeros_like(wo_p)
+        for kv in range(KV):
+            out = out.at[:, kv * Gs:kv * Gs + G].set(
+                wo_u[:, kv * G:(kv + 1) * G])
+        return out
+
+    pp = jax.tree.map(lambda x: x, pp)
+    pp["embed"] = pu["embed"]
+    pp["final_norm"] = pu["final_norm"]
+    if "unembed" in pu:
+        pp["unembed"] = pu["unembed"]
+    pp["layers"]["ln1"] = pu["layers"]["ln1"]
+    pp["layers"]["ln2"] = pu["layers"]["ln2"]
+    pp["layers"]["ffn"] = pu["layers"]["ffn"]
+    pp["layers"]["attn"]["wk"] = pu["layers"]["attn"]["wk"]
+    pp["layers"]["attn"]["wv"] = pu["layers"]["attn"]["wv"]
+    pp["layers"]["attn"]["wq"] = embed_wq(pu["layers"]["attn"]["wq"],
+                                          pp["layers"]["attn"]["wq"])
+    pp["layers"]["attn"]["wo"] = embed_wo(pu["layers"]["attn"]["wo"],
+                                          pp["layers"]["attn"]["wo"])
+
+    batch = {"tokens": jnp.arange(2 * 16, dtype=jnp.int32).reshape(2, 16)
+             % cfg_u.vocab_size}
+    lu = mu.forward(pu, batch)
+    lp = mp.forward(pp, batch)
+    np.testing.assert_allclose(np.asarray(lu, np.float32),
+                               np.asarray(lp, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_pad_slots_receive_zero_gradient():
+    cfg = _cfg(n_heads_padded=8)
+    model = TransformerLM(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(32, dtype=jnp.int32).reshape(2, 16)}
+    g = jax.grad(model.loss)(params, batch)
+    m = np.asarray(L.head_mask(cfg))
+    gwq = np.asarray(g["layers"]["attn"]["wq"], np.float32)
+    gwo = np.asarray(g["layers"]["attn"]["wo"], np.float32)
+    for h in range(8):
+        if not m[h]:
+            assert np.all(gwq[:, :, h] == 0), f"wq pad head {h} got grads"
+            assert np.all(gwo[:, h] == 0), f"wo pad head {h} got grads"

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs; plus prefill/decode consistency.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, ShapeConfig, get_config
+from repro.models import api
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+
+
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    model = api.get_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = api.make_batch(cfg, SMOKE_SHAPE, rng)
+    return cfg, model, params, batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params, batch = _setup(arch)
+    logits = jax.jit(model.forward)(params, batch)
+    B, S = batch["tokens"].shape
+    S_total = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_loss_no_nans(arch):
+    cfg, model, params, batch = _setup(arch)
+
+    @jax.jit
+    def step(p):
+        loss, g = jax.value_and_grad(model.loss)(p, batch)
+        p2 = jax.tree.map(
+            lambda w, gw: (w.astype(jnp.float32)
+                           - 1e-2 * gw.astype(jnp.float32)).astype(w.dtype),
+            p, g)
+        return loss, p2
+
+    l0, params = step(params)
+    l1, _ = step(params)
+    assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+    assert float(l1) < float(l0) + 0.5  # moving, not exploding
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(arch):
+    """decode_step on cache from prefill == teacher-forced forward."""
+    cfg, model, params, batch = _setup(arch)
+    if cfg.family == "vlm":
+        batch = dict(batch)
+        batch.pop("patches")  # text-only decode path
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cut = S - 1
+
+    full_logits = jax.jit(model.forward)(params, batch)
+    pb = dict(batch, tokens=tokens[:, :cut])
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, cache_len=S))(
+        params, pb)
+    step_logits, _ = jax.jit(model.decode_step)(
+        params, cache, tokens[:, cut:cut + 1], jnp.int32(cut))
+
+    P = cfg.n_patches if cfg.family == "vlm" else 0
+    want = full_logits[:, P + cut - 1 + 1, :] if False else \
+        full_logits[:, P + cut, :]
+    got = step_logits
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=0.12, atol=0.12)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_positive(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    assert 0 < na <= n
+
+
+def test_full_param_counts_match_billing_names():
+    """Full configs land near their advertised sizes."""
+    expect = {
+        "deepseek_v2_236b": (150e9, 300e9),
+        "jamba_15_large": (300e9, 480e9),
+        "deepseek_coder_33b": (28e9, 40e9),
+        "internlm2_20b": (17e9, 24e9),
+        "falcon_mamba_7b": (6e9, 9e9),
+        "phi3_vision_4b": (3.3e9, 5e9),
+        "llama32_1b": (0.9e9, 1.8e9),
+        "gemma3_1b": (0.7e9, 1.6e9),
+        "granite_moe_1b": (0.8e9, 1.8e9),
+        "whisper_tiny": (15e6, 80e6),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,191 @@
+"""End-to-end SEARS store behaviour: dedup, binding, fault tolerance."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.radmad import RADMADStore
+from repro.core.store import SEARSStore
+
+
+def _data(n, seed=0):
+    return np.random.RandomState(seed).randint(  # noqa: NPY002
+        0, 256, size=n, dtype=np.uint8).tobytes()
+
+
+def _store(binding="ulb", **kw):
+    kw.setdefault("num_clusters", 4)
+    kw.setdefault("node_capacity", 64 << 20)
+    return SEARSStore(n=10, k=5, binding=binding, **kw)
+
+
+# ------------------------------------------------------------ roundtrip ----
+@pytest.mark.parametrize("binding", ["ulb", "clb"])
+def test_put_get_roundtrip(binding):
+    s = _store(binding)
+    blob = _data(300_000)
+    s.put_file("alice", "f1", blob)
+    out, stats = s.get_file("alice", "f1")
+    assert out == blob
+    assert stats.time_s > 0
+    assert stats.n_fetched == stats.n_chunks or stats.n_fetched <= stats.n_chunks
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.binary(min_size=0, max_size=30_000))
+def test_put_get_roundtrip_property(blob):
+    s = _store()
+    s.put_file("u", "f", blob)
+    out, _ = s.get_file("u", "f")
+    assert out == blob
+
+
+def test_local_cache_skips_fetch():
+    s = _store()
+    blob = _data(100_000, seed=1)
+    s.put_file("u", "f", blob)
+    meta = s.switching["u"].get_meta("f")
+    local = {cid for cid, _ in meta.entries}
+    out, stats = s.get_file("u", "f", local_chunk_ids=local)
+    assert out == blob
+    assert stats.n_fetched == 0 and stats.bytes_fetched == 0
+
+
+# ----------------------------------------------------------------- dedup ---
+def test_duplicate_upload_stores_once():
+    s = _store()
+    blob = _data(200_000, seed=2)
+    st1 = s.put_file("u", "a", blob)
+    st2 = s.put_file("u", "b", blob)
+    assert st1.n_new_chunks > 0
+    assert st2.n_new_chunks == 0  # all chunks deduped
+    assert st2.bytes_uploaded == 0
+
+
+def test_intra_file_dedup():
+    s = _store()
+    block = _data(60_000, seed=3)
+    blob = block * 4  # heavy intra-file redundancy
+    stats = s.put_file("u", "rep", blob)
+    assert stats.n_unique_in_file < stats.n_chunks
+
+
+def test_clb_dedups_across_users_ulb_does_not():
+    blob = _data(150_000, seed=4)
+    clb = _store("clb")
+    clb.put_file("alice", "f", blob)
+    assert clb.put_file("bob", "f", blob).n_new_chunks == 0
+
+    ulb = _store("ulb")
+    ulb.put_file("alice", "f", blob)
+    # bob is bound to a different cluster -> cannot exploit alice's chunks
+    assert ulb.put_file("bob", "f", blob).n_new_chunks > 0
+    # dedup ratio: CLB >= ULB (paper Fig 3c ordering)
+    assert clb.stats().dedup_ratio > ulb.stats().dedup_ratio
+
+
+def test_delete_releases_space():
+    s = _store()
+    blob = _data(100_000, seed=5)
+    s.put_file("u", "a", blob)
+    s.put_file("u", "b", blob)
+    used_two = sum(c.used for c in s.clusters)
+    s.delete_file("u", "a")
+    assert sum(c.used for c in s.clusters) == used_two  # still referenced
+    s.delete_file("u", "b")
+    assert sum(c.used for c in s.clusters) == 0  # refcount hit zero
+    assert s.stats().n_unique_chunks == 0
+
+
+def test_update_file_refcounts():
+    s = _store()
+    s.put_file("u", "f", _data(50_000, seed=6))
+    s.put_file("u", "f", _data(50_000, seed=7))  # overwrite
+    assert s.n_files == 1
+    out, _ = s.get_file("u", "f")
+    assert out == _data(50_000, seed=7)
+
+
+def test_storage_overhead_is_n_over_k():
+    s = _store()
+    blob = _data(400_000, seed=8)
+    up = s.put_file("u", "f", blob)
+    ratio = up.piece_bytes_written / up.bytes_uploaded
+    assert 2.0 <= ratio < 2.2  # n/k = 2 plus piece padding
+
+
+# --------------------------------------------------------- fault tolerance -
+def test_survives_n_minus_k_node_failures():
+    s = _store()
+    blob = _data(200_000, seed=9)
+    s.put_file("u", "f", blob)
+    cluster = next(c for c in s.clusters if c.used > 0)
+    cluster.kill_nodes([0, 2, 4, 6, 8])  # kill 5 of 10 (= n-k)
+    out, _ = s.get_file("u", "f")
+    assert out == blob
+
+
+def test_data_loss_beyond_n_minus_k():
+    s = _store()
+    blob = _data(50_000, seed=10)
+    s.put_file("u", "f", blob)
+    cluster = next(c for c in s.clusters if c.used > 0)
+    cluster.kill_nodes(list(range(6)))  # 6 > n-k failures
+    with pytest.raises(ValueError):
+        s.get_file("u", "f")
+
+
+def test_repair_rebuilds_pieces():
+    s = _store()
+    blob = _data(80_000, seed=11)
+    s.put_file("u", "f", blob)
+    cluster = next(c for c in s.clusters if c.used > 0)
+    cluster.kill_nodes([1, 3])
+    # replace failed nodes with fresh ones and repair
+    for i in (1, 3):
+        cluster.nodes[i].alive = True
+        cluster.nodes[i]._pieces.clear()
+        cluster.nodes[i].used = 0
+    rebuilt = s.repair_cluster(cluster.cluster_id)
+    assert rebuilt > 0
+    cluster.kill_nodes([0, 2, 4, 6, 8])  # now survive 5 fresh failures
+    out, _ = s.get_file("u", "f")
+    assert out == blob
+
+
+# ---------------------------------------------------------------- R-ADMAD --
+def test_radmad_roundtrip_and_dedup():
+    r = RADMADStore(num_clusters=4, container_size=256 << 10,
+                    node_capacity=64 << 20)
+    blob = _data(300_000, seed=12)
+    r.put_file("u", "a", blob)
+    assert r.put_file("u", "b", blob).n_new_chunks == 0  # global dedup
+    r.flush()
+    out, stats = r.get_file("u", "a")
+    assert out == blob and stats.time_s > 0
+
+
+def test_radmad_degraded_read():
+    r = RADMADStore(num_clusters=2, container_size=128 << 10,
+                    node_capacity=64 << 20)
+    blob = _data(200_000, seed=13)
+    r.put_file("u", "f", blob)
+    r.flush()
+    for c in r.clusters:
+        c.kill_nodes([0, 1, 2, 3, 4])  # kill all systematic nodes
+    out, _ = r.get_file("u", "f")
+    assert out == blob  # decode path from parity pieces
+
+
+def test_radmad_index_overhead_larger_than_sears():
+    blob = _data(500_000, seed=14)
+    s = _store("clb")
+    r = RADMADStore(num_clusters=4, container_size=256 << 10,
+                    node_capacity=64 << 20)
+    s.put_file("u", "f", blob)
+    r.put_file("u", "f", blob)
+    r.flush()
+    s_stats, r_stats = s.stats(), r.stats()
+    per_chunk_s = s_stats.index_bytes / s_stats.n_unique_chunks
+    per_chunk_r = r_stats.index_bytes / r_stats.n_unique_chunks
+    assert per_chunk_r > per_chunk_s  # paper: R-ADMAD index more complex

@@ -1,0 +1,144 @@
+"""Workload generator + binding scheme + latency model unit tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binding import make_binding
+from repro.core.cluster import Cluster
+from repro.core.latency import (ClusterShare, LatencyParams, calibrate,
+                                retrieval_time)
+from repro.core.store import SEARSStore
+from repro.core.workload import (WorkloadConfig, generate_events,
+                                 request_trace)
+
+
+def test_workload_deterministic():
+    cfg = WorkloadConfig(scale=1 / 500_000, n_days=2)
+    a = [(e.user, e.filename, len(e.data)) for e in generate_events(cfg)]
+    b = [(e.user, e.filename, len(e.data)) for e in generate_events(cfg)]
+    assert a == b
+
+
+def test_workload_has_three_kinds_and_redundancy():
+    cfg = WorkloadConfig(scale=1 / 500_000, n_days=3)
+    events = list(generate_events(cfg))
+    kinds = {e.kind for e in events}
+    assert kinds == {"personal", "log", "backup"}
+    # day-over-day backup redundancy: consecutive images mostly identical
+    imgs = [e for e in events if e.kind == "backup" and e.user == "user0"]
+    a, b = np.frombuffer(imgs[0].data, np.uint8), np.frombuffer(
+        imgs[1].data, np.uint8)
+    n = min(len(a), len(b))
+    same = float(np.mean(a[:n] == b[:n]))
+    assert same > 0.9, same
+
+
+def test_workload_logs_append_mostly():
+    cfg = WorkloadConfig(scale=1 / 500_000, n_days=1)
+    logs = [e for e in generate_events(cfg)
+            if e.kind == "log" and e.user == "user0"]
+    assert len(logs) == 24
+    for prev, cur in zip(logs, logs[1:]):
+        assert cur.data.startswith(prev.data)  # append-only within a day
+
+
+def test_request_trace_diurnal():
+    cfg = WorkloadConfig(scale=1 / 500_000, n_days=3)
+    events = list(generate_events(cfg))
+    trace = request_trace(cfg, events, requests_per_user_day=20)
+    hours = np.array([h for _, h, _, _ in trace])
+    night = np.mean((hours >= 0) & (hours < 8))
+    assert night < 0.2  # light overnight activity (paper's day-shape)
+
+
+# ------------------------------------------------------------ binding ------
+def test_ulb_sticky_and_rollover():
+    ulb = make_binding("ulb")
+    clusters = [Cluster(i, 4, node_capacity=1000) for i in range(3)]
+    c1 = ulb.choose_cluster("alice", b"x", 100, clusters)
+    c2 = ulb.choose_cluster("alice", b"y", 100, clusters)
+    assert c1.cluster_id == c2.cluster_id  # sticky
+    for node in c1.nodes:
+        node.used = node.capacity  # exhaust
+    c3 = ulb.choose_cluster("alice", b"z", 100, clusters)
+    assert c3.cluster_id != c1.cluster_id  # rollover
+    assert ulb.dedup_scope("alice", clusters) == (c3.cluster_id,)
+
+
+def test_clb_picks_most_free():
+    clb = make_binding("clb")
+    clusters = [Cluster(i, 4, node_capacity=1000) for i in range(3)]
+    clusters[0].nodes[0].used = 500
+    clusters[2].nodes[0].used = 100
+    assert clb.choose_cluster("u", b"x", 10, clusters).cluster_id == 1
+    assert clb.dedup_scope("u", clusters) is None
+
+
+# ------------------------------------------------------------- latency -----
+def test_calibration_hits_anchors():
+    p = calibrate()
+    rng = np.random.default_rng(1)
+    single = np.mean([p.single_stream_time(3 * 2**20, rng)
+                      for _ in range(256)])
+    assert 6.0 < single < 8.5
+    from repro.core.latency import expected_retrieval_time
+    t = expected_retrieval_time(3 * 2**20, 10, 5, p,
+                                np.random.default_rng(2), samples=128)
+    assert 2.0 < t < 3.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 10), st.integers(0, 10**6))
+def test_retrieval_time_positive_and_finite(k, seed):
+    p = LatencyParams()
+    rng = np.random.default_rng(seed)
+    t = retrieval_time([ClusterShare(0, 100_000)], 10, k, p, rng)
+    assert np.isfinite(t) and t > 0
+
+
+def test_straggler_immunity_k_of_n():
+    """k-of-n reads: one 10x straggler must not 10x the retrieval time."""
+    p = LatencyParams(sigma=0.01)  # near-deterministic paths
+    rng = np.random.default_rng(0)
+    base = np.mean([retrieval_time([ClusterShare(0, 2**20)], 10, 5, p, rng)
+                    for _ in range(64)])
+
+    # a straggler = one path drawing a tiny rate; emulate via rho on one
+    # share vs splitting -- instead compare k=n (must wait for all) vs k<n
+    t_all = np.mean([retrieval_time([ClusterShare(0, 2**20)], 10, 10,
+                                    LatencyParams(sigma=1.0), rng)
+                     for _ in range(64)])
+    t_k5 = np.mean([retrieval_time([ClusterShare(0, 2**20)], 10, 5,
+                                   LatencyParams(sigma=1.0), rng)
+                    for _ in range(64)])
+    del base
+    # waiting for all 10 under heavy tail is much worse than first 5
+    assert t_all > 1.5 * t_k5
+
+
+def test_congestion_increases_latency():
+    p = LatencyParams()
+    rng = np.random.default_rng(3)
+    t0 = np.mean([retrieval_time([ClusterShare(0, 2**20, rho=0.0)],
+                                 10, 5, p, rng) for _ in range(64)])
+    t1 = np.mean([retrieval_time([ClusterShare(0, 2**20, rho=0.8)],
+                                 10, 5, p, rng) for _ in range(64)])
+    assert t1 > t0
+
+
+# ---------------------------------------------------------- store + trace --
+def test_store_handles_workload_slice():
+    cfg = WorkloadConfig(scale=1 / 500_000, n_days=2)
+    store = SEARSStore(num_clusters=4, node_capacity=1 << 30, binding="clb")
+    events = list(generate_events(cfg))
+    for ev in events:
+        store.put_file(ev.user, ev.filename, ev.data,
+                       timestamp=ev.day * 86400 + ev.hour * 3600)
+    st = store.stats()
+    assert st.n_files == len({(e.user, e.filename) for e in events})
+    assert st.dedup_ratio > 0.4  # redundancy + n/k=2 coding
+    # spot-check byte-exact retrieval of the most-overwritten file
+    ev = events[-1]
+    out, _ = store.get_file(ev.user, ev.filename)
+    assert out == ev.data
