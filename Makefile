@@ -1,0 +1,27 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-pipeline headline
+
+# tier-1 verification command
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the slow model/kernel suites; storage core only
+test-fast:
+	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
+		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
+		tests/test_workload_binding.py tests/test_system.py
+
+# full paper-claim benchmark battery (results/bench.json)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# per-chunk vs batched data-plane comparison (BENCH_pipeline.json)
+bench-pipeline:
+	$(PYTHON) -m benchmarks.run --only pipeline_bench
+
+# headline 3 MB retrieval claim; ENGINE=numpy|kernel
+ENGINE ?= numpy
+headline:
+	$(PYTHON) benchmarks/headline_3mb.py --engine $(ENGINE)

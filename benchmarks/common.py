@@ -24,7 +24,8 @@ def calibrated_params() -> LatencyParams:
 
 
 def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
-               node_capacity: int = 2 << 30, seed: int = 0):
+               node_capacity: int = 2 << 30, seed: int = 0,
+               engine: str = "numpy"):
     lat = calibrated_params()
     if scheme == "radmad":
         # paper: 8 MB containers at full scale; scaled with the dataset
@@ -33,7 +34,7 @@ def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
                            container_size=512 << 10, latency=lat, seed=seed)
     return SEARSStore(n=n, k=k, num_clusters=clusters,
                       node_capacity=node_capacity, binding=scheme,
-                      latency=lat, seed=seed)
+                      latency=lat, seed=seed, engine=engine)
 
 
 @dataclasses.dataclass

@@ -4,16 +4,31 @@ SEARS ULB(10,5) vs ~7 s from stock EC2 (single-stream download).
 The latency model is *calibrated* on exactly these two anchors
 (DESIGN.md S8), so this benchmark verifies the calibration closed and
 reports the speedup the model then predicts across file sizes.
+
+``--engine {numpy,kernel}`` selects the data-plane coding engine; both are
+byte-identical, and each row also reports measured host upload/retrieval
+wall time so per-chunk vs batched throughput can be compared.
 """
 
 from __future__ import annotations
 
+import argparse
+import time
+
 import numpy as np
 
-from benchmarks.common import calibrated_params, make_store
+try:
+    from benchmarks.common import calibrated_params, make_store
+except ImportError:  # invoked directly: python benchmarks/headline_3mb.py
+    import os
+    import sys
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+    from benchmarks.common import calibrated_params, make_store
 
 
-def run(quick: bool = True) -> list[dict]:
+def run(quick: bool = True, engine: str = "numpy") -> list[dict]:
     params = calibrated_params()
     rows = []
     rng = np.random.default_rng(7)
@@ -22,20 +37,28 @@ def run(quick: bool = True) -> list[dict]:
         single = float(np.mean([params.single_stream_time(nbytes, rng)
                                 for _ in range(128)]))
         # end-to-end through the real store path (chunk/dedup/code/fetch)
-        store = make_store("ulb")
+        store = make_store("ulb", engine=engine)
         blob = np.random.default_rng(mb).integers(
             0, 256, size=nbytes, dtype=np.int64).astype(np.uint8).tobytes()
+        t0 = time.perf_counter()
         store.put_file("u", f"f{mb}", blob)
+        put_wall = time.perf_counter() - t0
         times = []
-        for _ in range(16 if quick else 64):
+        n_iter = 16 if quick else 64
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
             out, st = store.get_file("u", f"f{mb}")
             times.append(st.time_s)
+        get_wall = (time.perf_counter() - t0) / n_iter
         assert out == blob
         sears = float(np.mean(times))
         rows.append({"name": f"headline/{mb}MB", "mb": mb,
+                     "engine": engine,
                      "sears_ulb_s": round(sears, 3),
                      "ec2_single_s": round(single, 3),
-                     "speedup": round(single / sears, 2)})
+                     "speedup": round(single / sears, 2),
+                     "host_put_s": round(put_wall, 3),
+                     "host_get_s": round(get_wall, 3)})
     return rows
 
 
@@ -50,3 +73,18 @@ def check(rows: list[dict]) -> list[str]:
         if r["speedup"] <= 1.5:
             fails.append(f"headline: speedup {r['speedup']} at {r['mb']}MB")
     return fails
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=("numpy", "kernel"),
+                    default="numpy", help="data-plane coding engine")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    result_rows = run(quick=not args.full, engine=args.engine)
+    for r in result_rows:
+        print(r)
+    failures = check(result_rows)
+    for f in failures:
+        print("FAIL:", f)
+    raise SystemExit(1 if failures else 0)

@@ -1,0 +1,122 @@
+"""Per-chunk vs batched data plane: the plan/execute pipeline benchmark.
+
+Uploads and retrieves a duplicate-heavy multi-file workload two ways:
+
+* ``numpy/per-chunk``   -- sequential ``put_file``/``get_file``, chunks
+  hashed/encoded/decoded one at a time on the host (the pre-refactor
+  path, kept as ``NumpyEngine``).
+* ``kernel/batched``    -- ``put_files``/``get_files`` with the
+  ``KernelEngine``: one SHA-1 launch and one GF(256) launch per length
+  bucket amortized over every chunk of every file in the batch.
+
+Retrieval is measured healthy (systematic memcpy fast path) and degraded
+(n-k nodes down -> every chunk takes the GF decode matmul).  Results land
+in ``BENCH_pipeline.json``; byte identity across the two paths is
+asserted.  On a CPU-only container the Pallas kernels run in interpret
+mode, so the batched numbers show launch-amortization structure, not
+TPU-class throughput.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import make_store
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_pipeline.json")
+
+
+def _workload(n_files: int, file_kb: int, dup_every: int = 3):
+    """n_files files, every ``dup_every``-th an exact duplicate."""
+    files = []
+    for i in range(n_files):
+        seed = 1000 + (i // dup_every if i % dup_every == 0 else i)
+        blob = np.random.default_rng(seed).integers(
+            0, 256, size=file_kb << 10, dtype=np.int64
+        ).astype(np.uint8).tobytes()
+        files.append((f"f{i}", blob))
+    return files
+
+
+def _measure(engine: str, batched: bool, files) -> dict:
+    store = make_store("ulb", clusters=4, engine=engine)
+    names = [fn for fn, _ in files]
+    total_mb = sum(len(b) for _, b in files) / 2**20
+
+    t0 = time.perf_counter()
+    if batched:
+        store.put_files("u", files)
+    else:
+        for fn, blob in files:
+            store.put_file("u", fn, blob)
+    t_put = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if batched:
+        outs = store.get_files("u", names)
+    else:
+        outs = [store.get_file("u", fn) for fn in names]
+    t_get = time.perf_counter() - t0
+    for (fn, blob), (out, _) in zip(files, outs):
+        assert out == blob, f"{engine}: {fn} corrupted"
+
+    # degraded: kill n-k nodes everywhere -> non-systematic GF decode
+    for c in store.clusters:
+        c.kill_nodes([0, 2, 4, 6, 8])
+    t0 = time.perf_counter()
+    if batched:
+        outs = store.get_files("u", names)
+    else:
+        outs = [store.get_file("u", fn) for fn in names]
+    t_deg = time.perf_counter() - t0
+    for (fn, blob), (out, _) in zip(files, outs):
+        assert out == blob, f"{engine} degraded: {fn} corrupted"
+
+    return {"engine": engine,
+            "mode": "batched" if batched else "per-chunk",
+            "files": len(files), "total_mb": round(total_mb, 2),
+            "upload_s": round(t_put, 3),
+            "upload_MBps": round(total_mb / t_put, 2),
+            "retrieve_s": round(t_get, 3),
+            "retrieve_MBps": round(total_mb / t_get, 2),
+            "degraded_retrieve_s": round(t_deg, 3),
+            "degraded_retrieve_MBps": round(total_mb / t_deg, 2),
+            "stats": {"dedup_ratio": round(store.stats().dedup_ratio, 4),
+                      "piece_bytes": store.stats().piece_bytes}}
+
+
+def run(quick: bool = True, engine: str | None = None) -> list[dict]:
+    files = _workload(n_files=6 if quick else 24,
+                      file_kb=96 if quick else 512)
+    variants = [("numpy", False), ("kernel", True)]
+    if engine:  # --engine narrows to one data plane (both modes)
+        variants = [(engine, False), (engine, True)]
+    results = [_measure(eng, batched, files) for eng, batched in variants]
+
+    # the two paths must agree on everything the user can observe
+    s0 = results[0]["stats"]
+    for r in results[1:]:
+        assert r["stats"] == s0, "engines diverged on StoreStats"
+
+    with open(_OUT, "w") as f:
+        json.dump({"workload": {"files": len(files),
+                                "total_mb": results[0]["total_mb"]},
+                   "results": results}, f, indent=1)
+    rows = []
+    for r in results:
+        rows.append({"name": f"pipeline/{r['engine']}-{r['mode']}",
+                     **{k: v for k, v in r.items() if k != "stats"}})
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        if r["upload_MBps"] <= 0 or r["retrieve_MBps"] <= 0:
+            fails.append(f"pipeline: non-positive throughput in {r['name']}")
+    return fails

@@ -9,6 +9,7 @@ reported and exit non-zero.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import os
 import sys
@@ -21,6 +22,7 @@ MODULES = [
     "fig3c_dedup_time",
     "fig3d_retrieval_load",
     "headline_3mb",
+    "pipeline_bench",
     "kernel_bench",
     "checkpoint_bench",
 ]
@@ -32,6 +34,8 @@ def main() -> None:
                     help="paper-scale (slow); default is quick mode")
     ap.add_argument("--only", default="",
                     help="comma-separated module filter")
+    ap.add_argument("--engine", default="", choices=("", "numpy", "kernel"),
+                    help="data-plane coding engine for store benchmarks")
     ap.add_argument("--out", default="results/bench.json")
     args = ap.parse_args()
 
@@ -42,8 +46,11 @@ def main() -> None:
         if only and modname not in only:
             continue
         mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
+        kwargs = {"quick": not args.full}
+        if args.engine and "engine" in inspect.signature(mod.run).parameters:
+            kwargs["engine"] = args.engine
         t0 = time.time()
-        rows = mod.run(quick=not args.full)
+        rows = mod.run(**kwargs)
         dt = time.time() - t0
         fails = mod.check(rows) if hasattr(mod, "check") else []
         all_rows[modname] = rows

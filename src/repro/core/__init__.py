@@ -2,6 +2,8 @@
 
 from repro.core.binding import ChunkLevelBinding, UserLevelBinding, make_binding
 from repro.core.chunking import Chunker, DEFAULT_CHUNKER
+from repro.core.engine import (CodingEngine, KernelEngine, NumpyEngine,
+                               make_engine)
 from repro.core.hashing import chunk_id, fast_chunk_id
 from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
@@ -11,5 +13,6 @@ from repro.core.store import SEARSStore
 __all__ = [
     "ChunkLevelBinding", "UserLevelBinding", "make_binding",
     "Chunker", "DEFAULT_CHUNKER", "chunk_id", "fast_chunk_id",
+    "CodingEngine", "KernelEngine", "NumpyEngine", "make_engine",
     "LatencyParams", "calibrate", "RADMADStore", "RSCode", "SEARSStore",
 ]

@@ -78,6 +78,19 @@ class Cluster:
         self.nodes = [StorageNode(node_id=i, capacity=node_capacity)
                       for i in range(n)]
         self.n = n
+        self._reserved = 0  # bytes promised to planned-but-unwritten chunks
+
+    def reserve(self, nbytes: int) -> None:
+        """Earmark capacity for a planned chunk whose pieces land later.
+
+        The plan/execute pipeline defers piece writes until a whole batch
+        is encoded; reservations keep ``free`` (and therefore binding
+        decisions) identical to the immediate-write sequential path.
+        """
+        self._reserved += nbytes
+
+    def release_reservation(self, nbytes: int) -> None:
+        self._reserved = max(0, self._reserved - nbytes)
 
     def coding_node(self, chunk_id: bytes) -> int:
         """Deterministic coding-node choice; spreads coding load."""
@@ -101,6 +114,21 @@ class Cluster:
                 f"cluster {self.cluster_id}: only {stored} alive nodes, "
                 f"need {need}")
 
+    def store_chunks(self, items: list[tuple[bytes, list[bytes]]],
+                     min_pieces: int | None = None,
+                     reserved: int = 0) -> None:
+        """Bulk write: one ``store_chunk`` per (chunk_id, pieces) item.
+
+        ``reserved`` bytes previously claimed via :meth:`reserve` for this
+        batch are released whether or not every write lands, so a failed
+        degraded write cannot leak capacity forever.
+        """
+        try:
+            for chunk_id, pieces in items:
+                self.store_chunk(chunk_id, pieces, min_pieces=min_pieces)
+        finally:
+            self.release_reservation(reserved)
+
     def read_pieces(self, chunk_id: bytes, want: int) -> dict[int, bytes]:
         """Collect up to ``want`` pieces from alive nodes holding them."""
         out: dict[int, bytes] = {}
@@ -111,13 +139,34 @@ class Cluster:
                 out[node.node_id] = node.get(chunk_id, node.node_id)
         return out
 
+    def read_pieces_batch(self, chunk_ids: list[bytes], want: int
+                          ) -> dict[bytes, dict[int, bytes]]:
+        """Bulk read: up to ``want`` pieces for every chunk id.
+
+        Walks the nodes once (one bulk request per node rather than one
+        request per chunk per node) and returns per-chunk piece maps with
+        exactly the same piece selection as serial :meth:`read_pieces`
+        calls -- node order decides which k pieces are used.
+        """
+        out: dict[bytes, dict[int, bytes]] = {cid: {} for cid in chunk_ids}
+        pending = set(out)
+        for node in self.nodes:
+            if not pending:
+                break
+            for cid in list(pending):
+                if node.has(cid, node.node_id):
+                    out[cid][node.node_id] = node.get(cid, node.node_id)
+                    if len(out[cid]) >= want:
+                        pending.discard(cid)
+        return out
+
     def delete_chunk(self, chunk_id: bytes) -> None:
         for node in self.nodes:
             node.delete(chunk_id, node.node_id)
 
     @property
     def free(self) -> int:
-        return sum(node.free for node in self.nodes)
+        return sum(node.free for node in self.nodes) - self._reserved
 
     @property
     def used(self) -> int:

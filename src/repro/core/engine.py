@@ -1,0 +1,132 @@
+"""Data-plane coding engines: the hash / RS-encode / RS-decode seam.
+
+The store splits into a *control plane* (chunking, dedup lookups, binding,
+placement -- per-chunk metadata work, ``repro.core.pipeline``) and a *data
+plane* (bulk byte work over batches of chunks).  ``CodingEngine`` is that
+data plane's interface; two implementations:
+
+* ``NumpyEngine`` -- the original per-chunk host path (``hashlib`` SHA-1,
+  one GF(256) matmul per chunk).  Reference semantics and fastest on a
+  CPU-only container.
+* ``KernelEngine`` -- batches chunks into (B, k, L) uint8 arrays (length
+  buckets padded to the GF kernel's TILE_L, batch padded to a power of
+  two) and dispatches through the Pallas kernels in ``repro.kernels``:
+  the bit-sliced GF(256) matmul for encode/decode and the lane-parallel
+  SHA-1 kernel for chunk ids.  On TPU the kernels run compiled; elsewhere
+  they run in interpret mode, so the engine stays byte-identical to
+  ``NumpyEngine`` everywhere (proven by the differential tests).
+
+Both engines produce identical bytes, so every store-level artifact --
+piece placement, dedup ratio, ``StoreStats`` -- is engine-invariant.
+"""
+
+from __future__ import annotations
+
+import abc
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.rs_code import RSCode
+
+
+class CodingEngine(abc.ABC):
+    """Bulk hash/encode/decode over batches of chunks (the data plane)."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
+        """Chunk ids (20-byte SHA-1 by default) for a batch of chunks."""
+
+    @abc.abstractmethod
+    def encode_blobs(self, code: RSCode,
+                     blobs: list[bytes]) -> list[list[bytes]]:
+        """RS-encode each blob into n pieces."""
+
+    @abc.abstractmethod
+    def decode_blobs(self, code: RSCode,
+                     jobs: list[tuple[dict[int, bytes], int]]
+                     ) -> list[bytes]:
+        """Reconstruct each blob from (piece_map, nbytes) jobs."""
+
+
+class NumpyEngine(CodingEngine):
+    """Per-chunk host path: hashlib + one numpy GF matmul per chunk."""
+
+    name = "numpy"
+
+    def __init__(self, hash_fn=hashing.chunk_id) -> None:
+        self.hash_fn = hash_fn
+
+    def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
+        return [self.hash_fn(c) for c in chunks]
+
+    def encode_blobs(self, code: RSCode,
+                     blobs: list[bytes]) -> list[list[bytes]]:
+        return [code.encode_bytes(b) for b in blobs]
+
+    def decode_blobs(self, code: RSCode, jobs) -> list[bytes]:
+        return [code.decode_bytes(pieces, nbytes) for pieces, nbytes in jobs]
+
+
+class KernelEngine(CodingEngine):
+    """Batched Pallas path: length-bucketed GF matmul + lane-parallel SHA-1.
+
+    ``impl='kernel'`` runs the Pallas kernels (interpret mode off-TPU);
+    ``impl='ref'`` selects the pure-jnp oracles -- same batching, useful
+    for differential testing and as an XLA-fusible fallback.
+
+    SHA-1 launches use a fixed batch of ``hash_batch`` messages padded to
+    ``max_hash_len`` bytes of message schedule, so every launch compiles
+    to one (hash_batch, M, 16) shape regardless of workload -- compile
+    once, reuse forever.
+    """
+
+    name = "kernel"
+
+    HASH_BATCH = 512
+
+    def __init__(self, hash_fn=hashing.chunk_id, impl: str = "kernel",
+                 max_hash_len: int = 8192,
+                 hash_batch: int | None = None) -> None:
+        self.hash_fn = hash_fn
+        self.impl = impl
+        self.max_hash_len = max_hash_len
+        self.hash_batch = hash_batch or self.HASH_BATCH
+
+    def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
+        if self.hash_fn is not hashing.chunk_id:
+            # custom id functions have no kernel twin -- host fallback
+            return [self.hash_fn(c) for c in chunks]
+        from repro.kernels import ops
+        out: list[bytes] = []
+        for i in range(0, len(chunks), self.hash_batch):
+            group = chunks[i: i + self.hash_batch]
+            pad = self.hash_batch - len(group)
+            blocks, counts = hashing.sha1_pad_batch(
+                group + [b""] * pad, max_len=self.max_hash_len)
+            words = ops.sha1_digest_words(blocks, counts, impl=self.impl)
+            digests = hashing.digest_words_to_bytes(np.asarray(words))
+            out.extend(digests[: len(group)])
+        return out
+
+    def encode_blobs(self, code: RSCode,
+                     blobs: list[bytes]) -> list[list[bytes]]:
+        from repro.kernels import ops
+        return ops.rs_encode_blobs(code, blobs, impl=self.impl)
+
+    def decode_blobs(self, code: RSCode, jobs) -> list[bytes]:
+        from repro.kernels import ops
+        return ops.rs_decode_blobs(code, jobs, impl=self.impl)
+
+
+def make_engine(spec, hash_fn=hashing.chunk_id) -> CodingEngine:
+    """Resolve an engine spec: an instance, 'numpy', or 'kernel'."""
+    if isinstance(spec, CodingEngine):
+        return spec
+    if spec == "numpy":
+        return NumpyEngine(hash_fn)
+    if spec == "kernel":
+        return KernelEngine(hash_fn)
+    raise ValueError(f"unknown coding engine {spec!r}")

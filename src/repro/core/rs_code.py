@@ -47,6 +47,64 @@ def decode_matrix(n: int, k: int, indices: tuple[int, ...]) -> np.ndarray:
     return gf256.gf_mat_inv(sub)
 
 
+# -- batch packing helpers (shared by the numpy path and the Pallas
+# -- bucketed dispatch in ``repro.kernels.ops``) -------------------------
+def padded_piece_len(piece_len: int, quantum: int) -> int:
+    """Round a piece length up to the bucketing quantum (e.g. TILE_L)."""
+    return -(-piece_len // quantum) * quantum
+
+
+def bucket_by_piece_len(piece_lens: list[int], quantum: int
+                        ) -> dict[int, list[int]]:
+    """Group blob indices into buckets keyed by padded piece length.
+
+    GF(256) coding is independent per byte column, so blobs whose piece
+    lengths round to the same quantum can share one (B, k, Lp) launch:
+    the zero columns past each blob's true L encode/decode to zeros and
+    are sliced away, leaving bytes identical to an unpadded call.
+    """
+    buckets: dict[int, list[int]] = {}
+    for i, L in enumerate(piece_lens):
+        buckets.setdefault(padded_piece_len(L, quantum), []).append(i)
+    return buckets
+
+
+def pack_blob(blob: bytes, k: int, piece_len: int,
+              padded_len: int | None = None) -> np.ndarray:
+    """Lay a blob out as (k, Lp) uint8 rows, zero-padded past ``piece_len``.
+
+    Row r holds blob bytes [r*L : (r+1)*L] in columns [:L] -- the exact
+    layout of ``RSCode.encode_bytes`` -- so column-sliced results match
+    the unpadded encoding byte for byte.
+    """
+    L = piece_len
+    Lp = L if padded_len is None else padded_len
+    if Lp < L:
+        raise ValueError(f"padded_len {Lp} < piece_len {L}")
+    buf = np.zeros(k * L, dtype=np.uint8)
+    buf[: len(blob)] = np.frombuffer(blob, dtype=np.uint8)
+    out = np.zeros((k, Lp), dtype=np.uint8)
+    out[:, :L] = buf.reshape(k, L)
+    return out
+
+
+def pack_pieces(pieces: dict[int, bytes], indices: tuple[int, ...],
+                piece_len: int, padded_len: int | None = None) -> np.ndarray:
+    """Stack received pieces (in ``indices`` order) as (k, Lp) uint8."""
+    L = piece_len
+    Lp = L if padded_len is None else padded_len
+    rows = []
+    for i in indices:
+        p = np.frombuffer(pieces[i], dtype=np.uint8)
+        if p.shape[0] != L:
+            raise ValueError(
+                f"piece shape mismatch: {p.shape[0]} != {L}")
+        rows.append(p)
+    out = np.zeros((len(indices), Lp), dtype=np.uint8)
+    out[:, :L] = np.stack(rows)
+    return out
+
+
 def _gf_matmul_batched_np(M: np.ndarray, data: np.ndarray) -> np.ndarray:
     """(r,k) GF matrix applied to (..., k, L) uint8 -> (..., r, L) uint8."""
     data = np.asarray(data, dtype=np.int32)
@@ -56,6 +114,71 @@ def _gf_matmul_batched_np(M: np.ndarray, data: np.ndarray) -> np.ndarray:
         out ^= gf256.gf_mul(M[:, j].reshape((1,) * (data.ndim - 2) + (r, 1)),
                             data[..., j : j + 1, :])
     return out.astype(np.uint8)
+
+
+# -- generic bucketed batch drivers (one implementation; the numpy
+# -- RSCode methods and the Pallas dispatch in kernels/ops.py both
+# -- delegate here, differing only in apply_fn / quantum / pad_batch) --
+def batch_encode_blobs(code: "RSCode", blobs: list[bytes], apply_fn,
+                       quantum: int = 1,
+                       pad_batch=lambda b: b) -> list[list[bytes]]:
+    """Encode blobs -> n pieces each, one ``apply_fn`` call per bucket.
+
+    ``apply_fn(M, arr)`` applies a GF(256) matrix to (B, k, Lp) uint8 and
+    returns (B, r, Lp); ``pad_batch`` rounds the batch axis up (e.g. to a
+    power of two to bound compiled kernel shapes).
+    """
+    piece_lens = [code.piece_len(len(b)) for b in blobs]
+    out: list[list[bytes] | None] = [None] * len(blobs)
+    G = generator_matrix(code.n, code.k)
+    for Lp, idxs in bucket_by_piece_len(piece_lens, quantum).items():
+        arr = np.zeros((pad_batch(len(idxs)), code.k, Lp), dtype=np.uint8)
+        for row, i in enumerate(idxs):
+            arr[row] = pack_blob(blobs[i], code.k, piece_lens[i], Lp)
+        enc = np.asarray(apply_fn(G, arr))  # (Bp, n, Lp)
+        for row, i in enumerate(idxs):
+            L = piece_lens[i]
+            out[i] = [enc[row, j, :L].tobytes() for j in range(code.n)]
+    return out  # type: ignore[return-value]
+
+
+def batch_decode_blobs(code: "RSCode",
+                       jobs: list[tuple[dict[int, bytes], int]], apply_fn,
+                       quantum: int = 1,
+                       pad_batch=lambda b: b) -> list[bytes]:
+    """Decode (piece_map, nbytes) jobs, bucketed by (index set, length).
+
+    Each bucket shares one decode matrix and one ``apply_fn`` call;
+    systematic arrivals -- the k data pieces came first -- are
+    reassembled host-side (the paper's memcpy fast path).
+    """
+    out: list[bytes | None] = [None] * len(jobs)
+    piece_lens: list[int] = []
+    buckets: dict[tuple[tuple[int, ...], int], list[int]] = {}
+    systematic = tuple(range(code.k))
+    for i, (pieces, nbytes) in enumerate(jobs):
+        if len(pieces) < code.k:
+            raise ValueError(
+                f"need >= k={code.k} pieces to decode, got {len(pieces)}")
+        idx = tuple(sorted(pieces)[: code.k])
+        L = code.piece_len(nbytes)
+        piece_lens.append(L)
+        if idx == systematic:
+            if any(len(pieces[j]) != L for j in idx):
+                raise ValueError(f"piece shape mismatch: want piece_len {L}")
+            out[i] = b"".join(pieces[j] for j in idx)[:nbytes]
+            continue
+        buckets.setdefault((idx, padded_piece_len(L, quantum)), []).append(i)
+    for (idx, Lp), idxs in buckets.items():
+        arr = np.zeros((pad_batch(len(idxs)), code.k, Lp), dtype=np.uint8)
+        for row, i in enumerate(idxs):
+            arr[row] = pack_pieces(jobs[i][0], idx, piece_lens[i], Lp)
+        M = decode_matrix(code.n, code.k, idx)
+        dec = np.asarray(apply_fn(M, arr))  # (Bp, k, Lp)
+        for row, i in enumerate(idxs):
+            L, nbytes = piece_lens[i], jobs[i][1]
+            out[i] = dec[row, :, :L].reshape(-1)[:nbytes].tobytes()
+    return out  # type: ignore[return-value]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +243,19 @@ class RSCode:
             raise ValueError(f"piece shape mismatch: {stack.shape} != {(self.k, L)}")
         data = self.decode(stack, idx)
         return data.reshape(-1)[:nbytes].tobytes()
+
+    # -- batch bytes API (numpy; bucketed by piece length) ----------------
+    def encode_blobs(self, blobs: list[bytes], quantum: int = 1
+                     ) -> list[list[bytes]]:
+        """Batched ``encode_bytes``: one matmul per piece-length bucket."""
+        return batch_encode_blobs(self, blobs, _gf_matmul_batched_np,
+                                  quantum=quantum)
+
+    def decode_blobs(self, jobs: list[tuple[dict[int, bytes], int]],
+                     quantum: int = 1) -> list[bytes]:
+        """Batched ``decode_bytes``: jobs are (piece_map, nbytes) pairs."""
+        return batch_decode_blobs(self, jobs, _gf_matmul_batched_np,
+                                  quantum=quantum)
 
     @property
     def storage_overhead(self) -> float:

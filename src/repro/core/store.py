@@ -11,6 +11,15 @@ Composes the paper's pipeline end to end:
             chunks already in the device's local store -> k-of-n piece
             reads per missing chunk -> GF(256) decode -> reassemble.
 
+Architecture: a **control plane** (``plan_*`` -- chunk boundaries, dedup
+lookups, binding/placement, reservations; pure per-chunk metadata) feeds a
+**data plane** (a ``repro.core.engine.CodingEngine`` -- batched SHA-1,
+RS encode, RS decode over bulk bytes).  ``put_files``/``get_files``
+amortize one data-plane batch (and on TPU, one kernel launch per length
+bucket) across many files; ``put_file``/``get_file`` are the batch-of-one
+special case.  Both engines are byte-identical, so placement and stats do
+not depend on the engine choice.
+
 Wall-clock retrieval time is simulated by ``repro.core.latency`` (no real
 network in this container); byte-level correctness is real -- every piece
 is stored, read back and decoded.
@@ -26,7 +35,10 @@ from repro.core import dedup, hashing
 from repro.core.binding import make_binding
 from repro.core.chunking import DEFAULT_CHUNKER, Chunker
 from repro.core.cluster import Cluster, SwitchingNode
+from repro.core.engine import CodingEngine, make_engine
 from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
+from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
+                                 UploadPlan)
 from repro.core.rs_code import RSCode
 
 
@@ -48,7 +60,7 @@ class RetrievalStats:
     time_s: float
     n_chunks: int
     n_fetched: int  # unique chunks actually downloaded
-    bytes_fetched: int
+    bytes_fetched: int  # wire bytes: k pieces per fetched chunk
     clusters_touched: int
 
 
@@ -75,7 +87,8 @@ class SEARSStore:
                  node_capacity: int = 1 << 30, binding: str = "ulb",
                  chunker: Chunker = DEFAULT_CHUNKER,
                  latency: LatencyParams | None = None, seed: int = 0,
-                 hash_fn=hashing.chunk_id) -> None:
+                 hash_fn=hashing.chunk_id,
+                 engine: str | CodingEngine = "numpy") -> None:
         self.code = RSCode(n, k)
         self.n, self.k = n, k
         self.chunker = chunker
@@ -87,6 +100,7 @@ class SEARSStore:
         self.latency = latency or LatencyParams()
         self.rng = np.random.default_rng(seed)
         self.hash_fn = hash_fn
+        self.engine = make_engine(engine, hash_fn)
         self.logical_bytes = 0
         self.n_files = 0
 
@@ -96,100 +110,270 @@ class SEARSStore:
             self.switching[user] = SwitchingNode(user)
         return self.switching[user]
 
+    # ----------------------------------------------------------- upload ---
     def put_file(self, user: str, filename: str, data: bytes,
                  timestamp: float = 0.0) -> UploadStats:
+        return self.put_files(user, [(filename, data)],
+                              timestamp=timestamp)[0]
+
+    def put_files(self, user: str, files: list[tuple[str, bytes]],
+                  timestamp: float = 0.0) -> list[UploadStats]:
+        """Upload a batch of files with batched data-plane work.
+
+        Hashing runs as one engine batch over every chunk of every file;
+        the control plane then plans the files *in order* (so later files
+        dedup against chunks introduced by earlier ones, exactly like
+        sequential ``put_file`` calls); finally all new chunks across the
+        batch are RS-encoded in one engine batch and landed per cluster
+        with the bulk store API.
+        """
+        # data plane: chunk + hash everything in one batch
+        per_file: list[tuple[str, bytes, list[tuple[int, int]]]] = []
+        all_chunks: list[bytes] = []
+        for filename, data in files:
+            spans = self.chunker.chunk_spans(data)
+            view = memoryview(data)
+            all_chunks.extend(bytes(view[o:o + l]) for o, l in spans)
+            per_file.append((filename, data, spans))
+        all_ids = self.engine.hash_chunks(all_chunks)
+
+        # control plane: plan each file in order (mutates index/meta).
+        # The batch is atomic: a failure in either phase (out of storage
+        # while planning, too few alive nodes while writing) rolls every
+        # planned file back -- no phantom metadata, no leaked
+        # reservations.
+        plans: list[UploadPlan] = []
+        pos = 0
+        try:
+            for filename, data, spans in per_file:
+                n_spans = len(spans)
+                ids = all_ids[pos:pos + n_spans]
+                chunks = all_chunks[pos:pos + n_spans]
+                pos += n_spans
+                plans.append(self._plan_put(user, filename, data, spans,
+                                            ids, chunks, timestamp))
+        except Exception:
+            # plan-phase failure: nothing executed yet, so completed
+            # plans still hold their reservations (the partial plan
+            # cleaned itself up)
+            for p in plans:
+                for t in p.encode_tasks:
+                    self.clusters[t.cluster_id].release_reservation(
+                        self.n * t.piece_len)
+            self._rollback_files(user, plans)
+            raise
+
+        # data plane: one encode batch + bulk piece writes
+        try:
+            self._execute_uploads(plans)  # releases all reservations
+        except Exception:
+            self._rollback_files(user, plans)
+            raise
+
+        return [UploadStats(filename=p.filename, file_bytes=p.file_bytes,
+                            n_chunks=p.n_chunks,
+                            n_unique_in_file=p.n_unique_in_file,
+                            n_new_chunks=len(p.encode_tasks),
+                            bytes_uploaded=p.bytes_uploaded,
+                            piece_bytes_written=self.n * sum(
+                                t.piece_len for t in p.encode_tasks))
+                for p in plans]
+
+    def _rollback_files(self, user: str, plans: list[UploadPlan]) -> None:
+        """Drop the metadata of planned files after a failed batch.
+
+        ``delete_file`` releases the index references; new chunks hit
+        refcount zero, which removes their index records and deletes any
+        pieces a partially-run execute phase already landed.
+        """
+        sw = self._switch(user)
+        for filename in {p.filename for p in plans}:
+            if filename in sw.table:
+                self.delete_file(user, filename)
+
+    def _plan_put(self, user: str, filename: str, data: bytes,
+                  spans: list[tuple[int, int]], ids: list[bytes],
+                  chunks: list[bytes], timestamp: float) -> UploadPlan:
+        """Control plane for one file: dedup, placement, metadata.
+
+        Index and chunk-meta-data mutations happen here; clusters chosen
+        for new chunks get their piece bytes *reserved* so the binding
+        scheme sees the same free-space trajectory as the old
+        store-immediately path (placement is plan-order deterministic).
+        A mid-plan failure (e.g. out of storage) unwinds this file's own
+        reservations and index mutations before propagating.
+        """
         sw = self._switch(user)
         if filename in sw.table:
             self.delete_file(user, filename)
 
-        spans = self.chunker.chunk_spans(data)
-        view = memoryview(data)
-        chunks = [bytes(view[o:o + l]) for o, l in spans]
-        ids = [self.hash_fn(c) for c in chunks]
         unique_ids, _ = dedup.dedup_file(ids)  # intra-file dedup (client)
         by_id: dict[bytes, bytes] = {}
         for cid, chunk in zip(ids, chunks):
             by_id.setdefault(cid, chunk)
 
         scope = self.binding.dedup_scope(user, self.clusters)
-        bytes_uploaded = 0
-        piece_bytes_written = 0
-        n_new = 0
-        resolved: dict[bytes, int] = {}  # chunk id -> cluster holding our copy
+        tasks: list[EncodeTask] = []
+        resolved: dict[bytes, int] = {}  # chunk id -> cluster holding a copy
 
-        for cid in unique_ids:
-            info = self.index.lookup(cid, scope)  # inter-file dedup
-            if info is None:
-                chunk = by_id[cid]
-                piece_len = self.code.piece_len(len(chunk))
-                cluster = self.binding.choose_cluster(
-                    user, cid, self.n * piece_len, self.clusters)
-                pieces = self.code.encode_bytes(chunk)  # coding node
-                cluster.store_chunk(cid, pieces, min_pieces=self.k)
-                self.index.add(cid, cluster.cluster_id, len(chunk))
-                bytes_uploaded += len(chunk)
-                piece_bytes_written += self.n * piece_len
-                resolved[cid] = cluster.cluster_id
-                n_new += 1
-            else:
-                resolved[cid] = info.cluster_id
-            # refcount = #files referencing this copy
-            self.index.add_ref(cid, resolved[cid])
+        try:
+            for cid in unique_ids:
+                info = self.index.lookup(cid, scope)  # inter-file dedup
+                if info is None:
+                    chunk = by_id[cid]
+                    piece_len = self.code.piece_len(len(chunk))
+                    cluster = self.binding.choose_cluster(
+                        user, cid, self.n * piece_len, self.clusters)
+                    cluster.reserve(self.n * piece_len)
+                    self.index.add(cid, cluster.cluster_id, len(chunk))
+                    tasks.append(EncodeTask(chunk_id=cid, data=chunk,
+                                            cluster_id=cluster.cluster_id,
+                                            piece_len=piece_len))
+                    resolved[cid] = cluster.cluster_id
+                else:
+                    resolved[cid] = info.cluster_id
+                # refcount = #files referencing this copy
+                self.index.add_ref(cid, resolved[cid])
+        except Exception:
+            for t in tasks:
+                self.clusters[t.cluster_id].release_reservation(
+                    self.n * t.piece_len)
+            for cid, cluster_id in resolved.items():
+                self.index.release(cid, cluster_id)  # drops new records
+            raise
 
         entries = [(cid, resolved[cid]) for cid in ids]
-
         meta = dedup.FileMeta(timestamp=timestamp, entries=entries,
                               lengths=[l for _, l in spans])
         sw.put_meta(filename, meta)
         self.logical_bytes += len(data)
         self.n_files += 1
-        return UploadStats(filename=filename, file_bytes=len(data),
-                           n_chunks=len(chunks),
-                           n_unique_in_file=len(unique_ids),
-                           n_new_chunks=n_new,
-                           bytes_uploaded=bytes_uploaded,
-                           piece_bytes_written=piece_bytes_written)
+        return UploadPlan(user=user, filename=filename, timestamp=timestamp,
+                          file_bytes=len(data), n_chunks=len(ids),
+                          n_unique_in_file=len(unique_ids),
+                          encode_tasks=tasks)
 
-    # ------------------------------------------------------------------
+    def _execute_uploads(self, plans: list[UploadPlan]) -> None:
+        """Data plane: batched RS encode + bulk per-cluster piece writes."""
+        tasks = [t for p in plans for t in p.encode_tasks]
+        # a later file in the batch may have overwritten/deleted an earlier
+        # one; drop tasks whose chunk copy is no longer indexed
+        live = [t for t in tasks
+                if self.index.get(t.chunk_id, t.cluster_id) is not None]
+        dead = [t for t in tasks
+                if self.index.get(t.chunk_id, t.cluster_id) is None]
+        for t in dead:
+            self.clusters[t.cluster_id].release_reservation(
+                self.n * t.piece_len)
+        reserved: dict[int, int] = {}
+        for t in live:
+            reserved[t.cluster_id] = (reserved.get(t.cluster_id, 0)
+                                      + self.n * t.piece_len)
+        try:
+            pieces_per_task = self.engine.encode_blobs(
+                self.code, [t.data for t in live])  # coding nodes
+            by_cluster: dict[int, list[tuple[bytes, list[bytes]]]] = {}
+            for t, pieces in zip(live, pieces_per_task):
+                by_cluster.setdefault(t.cluster_id, []).append(
+                    (t.chunk_id, pieces))
+            for cluster_id, items in by_cluster.items():
+                self.clusters[cluster_id].store_chunks(
+                    items, min_pieces=self.k,
+                    reserved=reserved.pop(cluster_id))
+        finally:
+            # a failure (encode or a cluster write) aborts the loop; drop
+            # the reservations of every cluster not reached so their free
+            # space is not understated forever
+            for cluster_id, nbytes in reserved.items():
+                self.clusters[cluster_id].release_reservation(nbytes)
+
+    # --------------------------------------------------------- download ---
     def get_file(self, user: str, filename: str,
                  local_chunk_ids: set[bytes] | None = None,
                  rho_fn=None) -> tuple[bytes, RetrievalStats]:
+        return self.get_files(user, [filename],
+                              local_chunk_ids=local_chunk_ids,
+                              rho_fn=rho_fn)[0]
+
+    def get_files(self, user: str, filenames: list[str],
+                  local_chunk_ids: set[bytes] | None = None,
+                  rho_fn=None) -> list[tuple[bytes, RetrievalStats]]:
+        """Retrieve a batch of files with one batched decode.
+
+        Piece reads are bulk per cluster (modeling per-batch parallel
+        node requests rather than serial per-chunk fetches) and all
+        non-systematic decodes across the batch share engine launches.
+        """
+        plans = [self._plan_get(user, fn, local_chunk_ids)
+                 for fn in filenames]
+
+        # data plane: bulk piece reads per cluster, then batched decode
+        all_tasks = [t for p in plans for t in p.fetch_tasks]
+        by_cluster: dict[int, list[FetchTask]] = {}
+        for t in all_tasks:
+            by_cluster.setdefault(t.cluster_id, []).append(t)
+        for cluster_id, tasks in by_cluster.items():
+            got = self.clusters[cluster_id].read_pieces_batch(
+                [t.chunk_id for t in tasks], self.k)
+            for t in tasks:
+                t.pieces = got[t.chunk_id]
+        blobs = self.engine.decode_blobs(
+            self.code, [(t.pieces, t.length) for t in all_tasks])
+
+        # assemble + stats per file
+        out: list[tuple[bytes, RetrievalStats]] = []
+        task_iter = iter(zip(all_tasks, blobs))
+        for plan in plans:
+            by_cid = {}
+            for _ in plan.fetch_tasks:
+                t, blob = next(task_iter)
+                by_cid[t.chunk_id] = blob
+            out.append(self._assemble(plan, by_cid, rho_fn))
+        return out
+
+    def _plan_get(self, user: str, filename: str,
+                  local_chunk_ids: set[bytes] | None) -> RetrievalPlan:
+        """Control plane: meta lookup + unique-missing-chunk fetch list."""
         sw = self._switch(user)
         meta = sw.get_meta(filename)
         local = local_chunk_ids or set()
 
-        need: dict[bytes, int] = {}  # unique missing chunk -> cluster
-        for cid, cluster_id in meta.entries:
-            if cid not in local and cid not in need:
-                need[cid] = cluster_id
-
-        # fetch + decode (byte-correct path)
-        decoded: dict[bytes, bytes] = {}
+        tasks: list[FetchTask] = []
         share_bytes: dict[int, int] = {}
-        for cid, cluster_id in need.items():
+        seen: set[bytes] = set()
+        for cid, cluster_id in meta.entries:
+            if cid in local or cid in seen:
+                continue
+            seen.add(cid)
             info = self.index.get(cid, cluster_id)
             if info is None:
                 raise KeyError(f"chunk {cid.hex()} lost from index")
-            pieces = self.clusters[cluster_id].read_pieces(cid, self.k)
-            decoded[cid] = self.code.decode_bytes(pieces, info.length)
-            share_bytes[cluster_id] = share_bytes.get(cluster_id, 0) + info.length
+            tasks.append(FetchTask(
+                chunk_id=cid, cluster_id=cluster_id, length=info.length,
+                piece_len=self.code.piece_len(info.length)))
+            share_bytes[cluster_id] = (share_bytes.get(cluster_id, 0)
+                                       + info.length)
+        return RetrievalPlan(user=user, filename=filename, meta=meta,
+                             fetch_tasks=tasks, share_bytes=share_bytes)
 
+    def _assemble(self, plan: RetrievalPlan, decoded: dict[bytes, bytes],
+                  rho_fn) -> tuple[bytes, RetrievalStats]:
+        meta = plan.meta
         out = bytearray()
-        lengths = meta.lengths
-        for (cid, _), ln in zip(meta.entries, lengths):
+        for (cid, _), ln in zip(meta.entries, meta.lengths):
             blob = decoded.get(cid)
             if blob is None:
                 blob = self._read_local_placeholder(cid, ln)
             out += blob[:ln]
 
         shares = [ClusterShare(cl, nb, rho=(rho_fn(cl) if rho_fn else 0.0))
-                  for cl, nb in share_bytes.items()]
+                  for cl, nb in plan.share_bytes.items()]
         t = retrieval_time(shares, self.n, self.k, self.latency, self.rng)
-        stats = RetrievalStats(filename=filename, file_bytes=meta.size,
+        stats = RetrievalStats(filename=plan.filename, file_bytes=meta.size,
                                time_s=t, n_chunks=len(meta.entries),
-                               n_fetched=len(need),
-                               bytes_fetched=sum(share_bytes.values()),
-                               clusters_touched=len(share_bytes))
+                               n_fetched=len(plan.fetch_tasks),
+                               bytes_fetched=plan.wire_bytes,
+                               clusters_touched=len(plan.share_bytes))
         return bytes(out), stats
 
     def _read_local_placeholder(self, cid: bytes, length: int) -> bytes:
@@ -216,25 +400,36 @@ class SEARSStore:
                 self.clusters[cluster_id].delete_chunk(cid)
 
     # ------------------------------------------------------------------
+    REPAIR_BATCH = 256  # chunks decoded+re-encoded per repair sub-batch
+
     def repair_cluster(self, cluster_id: int) -> int:
         """Re-create missing pieces on revived/replacement nodes.
 
         Returns the number of pieces rebuilt.  Requires >= k alive nodes.
+        Decode and re-encode run as engine batches of at most
+        ``REPAIR_BATCH`` chunks, bounding transient memory while still
+        amortizing kernel launches within each sub-batch.
         """
         cluster = self.clusters[cluster_id]
+        all_cids = list(self.index.cluster_chunks(cluster_id))
         rebuilt = 0
-        for cid in list(self.index.cluster_chunks(cluster_id)):
-            info = self.index.get(cid, cluster_id)
-            pieces = cluster.read_pieces(cid, self.k)
-            if len(pieces) < self.k:
-                raise RuntimeError(
-                    f"chunk {cid.hex()} unrecoverable: {len(pieces)} < k")
-            blob = self.code.decode_bytes(pieces, info.length)
-            all_pieces = self.code.encode_bytes(blob)
-            for node in cluster.nodes:
-                if node.alive and not node.has(cid, node.node_id):
-                    node.put(cid, node.node_id, all_pieces[node.node_id])
-                    rebuilt += 1
+        for start in range(0, len(all_cids), self.REPAIR_BATCH):
+            cids = all_cids[start:start + self.REPAIR_BATCH]
+            jobs: list[tuple[dict[int, bytes], int]] = []
+            for cid in cids:
+                info = self.index.get(cid, cluster_id)
+                pieces = cluster.read_pieces(cid, self.k)
+                if len(pieces) < self.k:
+                    raise RuntimeError(
+                        f"chunk {cid.hex()} unrecoverable: {len(pieces)} < k")
+                jobs.append((pieces, info.length))
+            blobs = self.engine.decode_blobs(self.code, jobs)
+            all_pieces = self.engine.encode_blobs(self.code, blobs)
+            for cid, pieces in zip(cids, all_pieces):
+                for node in cluster.nodes:
+                    if node.alive and not node.has(cid, node.node_id):
+                        node.put(cid, node.node_id, pieces[node.node_id])
+                        rebuilt += 1
         return rebuilt
 
     # ------------------------------------------------------------------

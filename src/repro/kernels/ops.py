@@ -46,6 +46,46 @@ def rs_decode(code, pieces, indices, impl: str = "kernel") -> jnp.ndarray:
     return rs_apply(M, pieces, impl=impl)
 
 
+# -------------------------------------------- bucketed blob dispatch ------
+# Contract: blobs are raw ``bytes``; each is laid out (k, L) uint8 with
+# L = code.piece_len(len(blob)) (``rs_code.pack_blob``).  Blobs are
+# bucketed by L rounded up to the kernel's TILE_L so one pallas_call
+# serves a whole bucket; the batch axis is padded to the next power of
+# two to bound the set of compiled (B, k, L) shapes.  Zero pad columns /
+# rows are exact under GF(256) (coding is per byte column), so sliced
+# results are byte-identical to per-blob host encoding.  The bucketing
+# itself lives in ``rs_code.batch_{encode,decode}_blobs``; here we only
+# supply the kernel apply_fn and the TPU-shaped padding policy.
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length() if n > 1 else 1
+
+
+def rs_encode_blobs(code, blobs: list[bytes],
+                    impl: str = "kernel") -> list[list[bytes]]:
+    """Batched RS encode of variable-length blobs -> n pieces per blob."""
+    from repro.core import rs_code
+    from repro.kernels.gf_matmul import TILE_L
+    return rs_code.batch_encode_blobs(
+        code, blobs, lambda M, arr: rs_apply(M, arr, impl=impl),
+        quantum=TILE_L, pad_batch=_pow2)
+
+
+def rs_decode_blobs(code, jobs: list[tuple[dict[int, bytes], int]],
+                    impl: str = "kernel") -> list[bytes]:
+    """Batched RS decode; jobs are (piece_map, original_nbytes) pairs.
+
+    Jobs sharing a received-index set and padded length decode in one
+    launch (one decode matrix per bucket); systematic arrivals take the
+    host-side memcpy fast path.
+    """
+    from repro.core import rs_code
+    from repro.kernels.gf_matmul import TILE_L
+    return rs_code.batch_decode_blobs(
+        code, jobs, lambda M, arr: rs_apply(M, arr, impl=impl),
+        quantum=TILE_L, pad_batch=_pow2)
+
+
 # ------------------------------------------------------------------ gear ---
 def gear_hash(data, impl: str = "kernel") -> jnp.ndarray:
     """(N,) uint8 -> (N,) uint32 CDC rolling hash."""

@@ -171,9 +171,15 @@ def analyze_hlo(text: str) -> HloStats:
                 whiles.append((name, refs["body"].group(1),
                                refs["condition"].group(1)))
                 continue
+            d = _split_def(line)
+            opcode = d[2] if d else None
             for kind in ("calls", "to_apply"):
                 if refs[kind]:
-                    calls[name].append((refs[kind].group(1), kind))
+                    # a plain `call`'s target is a real top-level computation
+                    # (e.g. XLA:CPU parallel-call wrappers), not a fused body
+                    calls[name].append(
+                        (refs[kind].group(1),
+                         "call" if opcode == "call" else kind))
             bm = _BRANCHES_RE.search(line)
             if bm:
                 for b in bm.group(1).split(","):

@@ -114,6 +114,47 @@ def test_storage_overhead_is_n_over_k():
     assert 2.0 <= ratio < 2.2  # n/k = 2 plus piece padding
 
 
+def test_bytes_fetched_counts_wire_bytes():
+    """bytes_fetched reports actual wire traffic: k pieces per chunk."""
+    s = _store()
+    blob = _data(120_000, seed=21)
+    s.put_file("u", "f", blob)
+    out, stats = s.get_file("u", "f")
+    assert out == blob
+    meta = s.switching["u"].get_meta("f")
+    expected = 0
+    seen = set()
+    for cid, cluster_id in meta.entries:
+        if cid in seen:
+            continue
+        seen.add(cid)
+        info = s.index.get(cid, cluster_id)
+        expected += s.k * s.code.piece_len(info.length)
+    assert stats.bytes_fetched == expected
+    # wire bytes >= decoded bytes (piece padding), not the decoded length
+    assert stats.bytes_fetched >= sum(
+        ln for (cid, _), ln in zip(meta.entries, meta.lengths))
+
+
+def test_put_files_get_files_batched_roundtrip():
+    """Batched entry points == sequential calls: bytes, stats, placement."""
+    blobs = [_data(30_000 + 7000 * i, seed=30 + i) for i in range(4)]
+    files = [(f"f{i}", b) for i, b in enumerate(blobs)]
+    files.append(("dup0", blobs[0]))  # cross-file duplicate in same batch
+
+    seq = _store()
+    for fn, b in files:
+        seq.put_file("u", fn, b)
+    bat = _store()
+    up = bat.put_files("u", files)
+    assert up[-1].n_new_chunks == 0  # deduped against batch-mate f0
+    assert seq.stats() == bat.stats()
+    for (fn, b), (out, stats) in zip(files, bat.get_files(
+            "u", [fn for fn, _ in files])):
+        assert out == b
+        assert stats.n_chunks > 0
+
+
 # --------------------------------------------------------- fault tolerance -
 def test_survives_n_minus_k_node_failures():
     s = _store()
@@ -123,6 +164,43 @@ def test_survives_n_minus_k_node_failures():
     cluster.kill_nodes([0, 2, 4, 6, 8])  # kill 5 of 10 (= n-k)
     out, _ = s.get_file("u", "f")
     assert out == blob
+
+
+def test_failed_upload_rolls_back_cleanly():
+    """A put that cannot land >= k pieces leaves no phantom file behind."""
+    from repro.core.cluster import NodeDownError
+
+    s = _store()
+    for c in s.clusters:
+        c.kill_nodes(list(range(6)))  # only 4 alive < k everywhere
+    with pytest.raises(NodeDownError):
+        s.put_file("u", "f", _data(50_000, seed=20))
+    assert "f" not in s.switching["u"].table  # no phantom metadata
+    with pytest.raises(KeyError):
+        s.get_file("u", "f")
+    assert s.stats().n_unique_chunks == 0  # index rolled back
+    assert s.n_files == 0 and s.logical_bytes == 0
+    assert all(c._reserved == 0 for c in s.clusters)  # no leaked space
+    for c in s.clusters:
+        c.revive_nodes(list(range(6)))
+    blob = _data(50_000, seed=20)
+    s.put_file("u", "f", blob)  # store fully usable after the failure
+    assert s.get_file("u", "f")[0] == blob
+
+
+def test_out_of_storage_mid_batch_rolls_back():
+    """Plan-phase failure (out of storage) leaves no phantoms/leaks."""
+    s = SEARSStore(n=10, k=5, num_clusters=1, node_capacity=40_000)
+    files = [(f"f{i}", _data(60_000, seed=40 + i)) for i in range(4)]
+    with pytest.raises(RuntimeError, match="out of storage"):
+        s.put_files("u", files)
+    assert s.switching["u"].table == {}  # whole batch rolled back
+    assert s.stats().n_unique_chunks == 0
+    assert s.n_files == 0 and s.logical_bytes == 0
+    assert all(c._reserved == 0 for c in s.clusters)
+    small = _data(10_000, seed=50)
+    s.put_file("u", "small", small)  # capacity still usable
+    assert s.get_file("u", "small")[0] == small
 
 
 def test_data_loss_beyond_n_minus_k():
