@@ -1,15 +1,21 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-pipeline headline
+.PHONY: test test-slow test-fast bench bench-pipeline bench-smoke headline
 
-# tier-1 verification command
+# tier-1 verification command (slow interpret-mode kernel tests are
+# deselected by pytest.ini; run them with `make test-slow`)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# the slow interpret-mode Pallas kernel sweeps only
+test-slow:
+	$(PYTHON) -m pytest -x -q -m slow
 
 # skip the slow model/kernel suites; storage core only
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
+		tests/test_scheduler.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py
 
@@ -20,6 +26,11 @@ bench:
 # per-chunk vs batched data-plane comparison (BENCH_pipeline.json)
 bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
+
+# quick CI smoke: data-plane pipeline + cross-user scheduler benchmarks
+# (BENCH_pipeline.json + BENCH_scheduler.json)
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench
 
 # headline 3 MB retrieval claim; ENGINE=numpy|kernel
 ENGINE ?= numpy

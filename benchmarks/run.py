@@ -23,6 +23,7 @@ MODULES = [
     "fig3d_retrieval_load",
     "headline_3mb",
     "pipeline_bench",
+    "scheduler_bench",
     "kernel_bench",
     "checkpoint_bench",
 ]

@@ -1,0 +1,186 @@
+"""Cross-user batch scheduler: shared-launch amortization benchmark.
+
+Replays a multi-user upload/retrieval trace (``workload.multi_user_*``)
+two ways against identical stores:
+
+* ``per-user``  -- one ``put_files``/``get_files`` call per user, i.e.
+  each user's request pays its own data-plane launches (the pre-scheduler
+  switching node).
+* ``coalesced`` -- all users' requests queued on a ``BatchScheduler`` and
+  executed in one flush window: one SHA-1 launch and one GF(256) launch
+  per length bucket shared across *every* queued user.
+
+For each (users, files-per-user) sweep point we record wall time, mean
+per-user latency (for the coalesced path this is the flush wall time,
+since no request completes before its flush window does), and the
+data-plane launch counts from
+``kernels.ops.LAUNCHES``, and we assert the two ways are byte-identical
+(same ``StoreStats``, same pieces on every node, same retrieved bytes).
+Results land in ``BENCH_scheduler.json``.
+
+Both paths run the batched kernel engine after an untimed warmup pass, so
+the comparison isolates *scheduling* (launch amortization), not JIT
+compilation.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import make_store
+from repro.core.workload import (MultiUserConfig, multi_user_get_trace,
+                                 multi_user_put_trace)
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_scheduler.json")
+
+
+def _fresh_store():
+    return make_store("ulb", clusters=8, node_capacity=1 << 30,
+                      engine="kernel")
+
+
+def _launches():
+    from repro.kernels import ops
+    return ops.LAUNCHES
+
+
+def _run_per_user(puts, gets) -> dict:
+    store = _fresh_store()
+    before = _launches().snapshot()
+    per_user_s = []
+    t0 = time.perf_counter()
+    for user, files in puts:
+        t1 = time.perf_counter()
+        store.put_files(user, files)
+        per_user_s.append(time.perf_counter() - t1)
+    t_put = time.perf_counter() - t0
+    put_launches = _launches().delta(before)
+
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    results = {user: store.get_files(user, names) for user, names in gets}
+    t_get = time.perf_counter() - t0
+    get_launches = _launches().delta(before)
+    return {"store": store, "results": results, "put_s": t_put,
+            "get_s": t_get, "per_user_put_s": per_user_s,
+            "put_launches": put_launches, "get_launches": get_launches}
+
+
+def _run_coalesced(puts, gets) -> dict:
+    store = _fresh_store()
+    sched = store.scheduler()
+    for user, files in puts:
+        sched.submit_put(user, files)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    put_reqs = sched.flush()
+    t_put = time.perf_counter() - t0
+    put_launches = _launches().delta(before)
+    assert all(r.ok for r in put_reqs), [r.error for r in put_reqs]
+
+    get_reqs = {user: sched.submit_get(user, names) for user, names in gets}
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    sched.flush()
+    t_get = time.perf_counter() - t0
+    get_launches = _launches().delta(before)
+    assert all(r.ok for r in get_reqs.values())
+    return {"store": store, "sched": sched,
+            "results": {u: r.result for u, r in get_reqs.items()},
+            "put_s": t_put, "get_s": t_get,
+            "put_launches": put_launches, "get_launches": get_launches}
+
+
+def _assert_identical(puts, a: dict, b: dict) -> None:
+    """Per-user and coalesced paths must agree on every observable byte."""
+    sa, sb = a["store"], b["store"]
+    assert sa.stats() == sb.stats(), "scheduler changed StoreStats"
+    for ca, cb in zip(sa.clusters, sb.clusters):
+        for na, nb in zip(ca.nodes, cb.nodes):
+            assert na._pieces == nb._pieces, "scheduler changed stored pieces"
+    originals = {user: dict(files) for user, files in puts}
+    for user, outs in b["results"].items():
+        for (out, st), (out_a, _) in zip(outs, a["results"][user]):
+            assert out == out_a == originals[user][st.filename], \
+                f"scheduler corrupted {user}/{st.filename}"
+
+
+def run(quick: bool = True) -> list[dict]:
+    sweep = [(2, 3), (4, 3), (8, 4)] if quick else [(2, 4), (4, 4), (8, 6),
+                                                    (16, 6)]
+    file_kb = 48 if quick else 128
+
+    rows = []
+    for n_users, files_per_user in sweep:
+        cfg = MultiUserConfig(n_users=n_users, files_per_user=files_per_user,
+                              file_kb=file_kb)
+        puts = multi_user_put_trace(cfg)
+        gets = multi_user_get_trace(puts)
+        total_mb = sum(len(b) for _, fs in puts for _, b in fs) / 2**20
+
+        # first pass is the untimed warmup (jit-compiles this sweep
+        # point's batch shapes for both paths); second pass is reported
+        _run_per_user(puts, gets)
+        per_user = _run_per_user(puts, gets)
+        _run_coalesced(puts, gets)
+        coal = _run_coalesced(puts, gets)
+        _assert_identical(puts, per_user, coal)
+
+        pu_l = per_user["put_launches"].total + per_user["get_launches"].total
+        co_l = coal["put_launches"].total + coal["get_launches"].total
+        rows.append({
+            "name": f"scheduler/u{n_users}xf{files_per_user}",
+            "users": n_users, "files_per_user": files_per_user,
+            "total_mb": round(total_mb, 2),
+            "dedup_ratio": round(coal["store"].stats().dedup_ratio, 4),
+            "per_user": {
+                "put_s": round(per_user["put_s"], 4),
+                "get_s": round(per_user["get_s"], 4),
+                "mean_user_put_s": round(
+                    sum(per_user["per_user_put_s"]) / n_users, 4),
+                "launches": pu_l,
+                "sha1_launches": (per_user["put_launches"].sha1
+                                  + per_user["get_launches"].sha1),
+                "gf_launches": (per_user["put_launches"].gf
+                                + per_user["get_launches"].gf),
+            },
+            "coalesced": {
+                "put_s": round(coal["put_s"], 4),
+                "get_s": round(coal["get_s"], 4),
+                # every request in a coalesced flush completes when the
+                # flush does, so per-user latency == flush wall time
+                "mean_user_put_s": round(coal["put_s"], 4),
+                "launches": co_l,
+                "sha1_launches": (coal["put_launches"].sha1
+                                  + coal["get_launches"].sha1),
+                "gf_launches": (coal["put_launches"].gf
+                                + coal["get_launches"].gf),
+            },
+            "launch_reduction": round(pu_l / max(1, co_l), 2),
+            "identical_artifacts": True,
+        })
+    with open(_OUT, "w") as f:
+        json.dump({"engine": "kernel", "results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        if r["users"] >= 4 and \
+                r["coalesced"]["launches"] >= r["per_user"]["launches"]:
+            fails.append(
+                f"{r['name']}: coalescing {r['users']} users did not reduce "
+                f"data-plane launches ({r['coalesced']['launches']} vs "
+                f"{r['per_user']['launches']})")
+        if not r["identical_artifacts"]:
+            fails.append(f"{r['name']}: artifacts diverged")
+    return fails
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

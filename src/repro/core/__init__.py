@@ -8,6 +8,7 @@ from repro.core.hashing import chunk_id, fast_chunk_id
 from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
 from repro.core.rs_code import RSCode
+from repro.core.scheduler import BatchScheduler, Request, RequestQueue
 from repro.core.store import SEARSStore
 
 __all__ = [
@@ -15,4 +16,5 @@ __all__ = [
     "Chunker", "DEFAULT_CHUNKER", "chunk_id", "fast_chunk_id",
     "CodingEngine", "KernelEngine", "NumpyEngine", "make_engine",
     "LatencyParams", "calibrate", "RADMADStore", "RSCode", "SEARSStore",
+    "BatchScheduler", "Request", "RequestQueue",
 ]

@@ -73,24 +73,31 @@ class NumpyEngine(CodingEngine):
 class KernelEngine(CodingEngine):
     """Batched Pallas path: length-bucketed GF matmul + lane-parallel SHA-1.
 
-    ``impl='kernel'`` runs the Pallas kernels (interpret mode off-TPU);
-    ``impl='ref'`` selects the pure-jnp oracles -- same batching, useful
-    for differential testing and as an XLA-fusible fallback.
+    ``impl='kernel'`` runs the Pallas kernels; ``impl='ref'`` selects the
+    jit-compiled pure-jnp oracles -- same batching, same bytes.  The
+    default (``impl=None``) is backend-aware: Pallas on TPU, ``'ref'``
+    everywhere else, because interpret-mode Pallas executes the kernel
+    body in Python per grid cell and is orders of magnitude slower than
+    the XLA-compiled oracle on CPU.
 
     SHA-1 launches use a fixed batch of ``hash_batch`` messages padded to
     ``max_hash_len`` bytes of message schedule, so every launch compiles
     to one (hash_batch, M, 16) shape regardless of workload -- compile
-    once, reuse forever.
+    once, reuse forever.  Chunks longer than ``max_hash_len`` would grow
+    that shape, so they take the host ``hash_fn`` fallback instead.
     """
 
     name = "kernel"
 
     HASH_BATCH = 512
 
-    def __init__(self, hash_fn=hashing.chunk_id, impl: str = "kernel",
+    def __init__(self, hash_fn=hashing.chunk_id, impl: str | None = None,
                  max_hash_len: int = 8192,
                  hash_batch: int | None = None) -> None:
         self.hash_fn = hash_fn
+        if impl is None:
+            import jax
+            impl = "kernel" if jax.default_backend() == "tpu" else "ref"
         self.impl = impl
         self.max_hash_len = max_hash_len
         self.hash_batch = hash_batch or self.HASH_BATCH
@@ -100,16 +107,28 @@ class KernelEngine(CodingEngine):
             # custom id functions have no kernel twin -- host fallback
             return [self.hash_fn(c) for c in chunks]
         from repro.kernels import ops
-        out: list[bytes] = []
-        for i in range(0, len(chunks), self.hash_batch):
-            group = chunks[i: i + self.hash_batch]
+        out: list[bytes | None] = [None] * len(chunks)
+        batch: list[bytes] = []
+        batch_pos: list[int] = []
+        for i, c in enumerate(chunks):
+            if len(c) > self.max_hash_len:
+                # oversized chunk: padding it would grow the compiled
+                # (hash_batch, M, 16) launch shape -- hash on the host
+                out[i] = self.hash_fn(c)
+            else:
+                batch.append(c)
+                batch_pos.append(i)
+        for i in range(0, len(batch), self.hash_batch):
+            group = batch[i: i + self.hash_batch]
             pad = self.hash_batch - len(group)
             blocks, counts = hashing.sha1_pad_batch(
                 group + [b""] * pad, max_len=self.max_hash_len)
             words = ops.sha1_digest_words(blocks, counts, impl=self.impl)
             digests = hashing.digest_words_to_bytes(np.asarray(words))
-            out.extend(digests[: len(group)])
-        return out
+            for pos, digest in zip(batch_pos[i: i + self.hash_batch],
+                                   digests):
+                out[pos] = digest
+        return out  # type: ignore[return-value]
 
     def encode_blobs(self, code: RSCode,
                      blobs: list[bytes]) -> list[list[bytes]]:
@@ -122,11 +141,22 @@ class KernelEngine(CodingEngine):
 
 
 def make_engine(spec, hash_fn=hashing.chunk_id) -> CodingEngine:
-    """Resolve an engine spec: an instance, 'numpy', or 'kernel'."""
+    """Resolve an engine spec to a ``CodingEngine``.
+
+    Accepted specs: a ``CodingEngine`` instance, ``'numpy'`` (per-chunk
+    host path), ``'kernel'`` (batched; backend-aware -- Pallas kernels on
+    TPU, jitted ``'ref'`` oracles elsewhere), or the explicit overrides
+    ``'ref'`` / ``'pallas'`` that pin the batched implementation
+    regardless of backend.
+    """
     if isinstance(spec, CodingEngine):
         return spec
     if spec == "numpy":
         return NumpyEngine(hash_fn)
     if spec == "kernel":
-        return KernelEngine(hash_fn)
+        return KernelEngine(hash_fn)  # impl resolved from backend
+    if spec == "ref":
+        return KernelEngine(hash_fn, impl="ref")
+    if spec == "pallas":
+        return KernelEngine(hash_fn, impl="kernel")
     raise ValueError(f"unknown coding engine {spec!r}")

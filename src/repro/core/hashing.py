@@ -48,12 +48,23 @@ def sha1_pad_batch(chunks: list[bytes], max_len: int | None = None
     (B, max_blocks, 16) uint32 and ``n_blocks`` (B,) int32 gives the number
     of *real* blocks per chunk (trailing blocks are zero and must be
     ignored by the compression loop).
+
+    ``max_len`` (message bytes) is an *authoritative* cap on the block
+    axis: the output is always exactly ``blocks_for(max_len)`` blocks wide
+    so callers get one fixed compiled launch shape, and a chunk that would
+    not fit raises ``ValueError`` instead of silently widening the shape
+    (callers route such chunks to a host hash fallback).
     """
     padded = [sha1_pad_blocks(c) for c in chunks]
     counts = np.array([p.shape[0] for p in padded], dtype=np.int32)
     cap = max(int(counts.max()), 1)
     if max_len is not None:
-        cap = max(cap, (max_len + 9 + 63) // 64)
+        fixed = (max_len + 9 + 63) // 64
+        if cap > fixed:
+            raise ValueError(
+                f"chunk needs {cap} SHA-1 blocks > fixed cap {fixed} "
+                f"(max_len={max_len}); hash oversized chunks on the host")
+        cap = fixed
     out = np.zeros((len(chunks), cap, 16), dtype=np.uint32)
     for i, p in enumerate(padded):
         out[i, : p.shape[0]] = p

@@ -42,6 +42,13 @@ class UploadPlan:
     (so later files in the same batch dedup against earlier ones); only
     the data-plane work -- encoding ``encode_tasks`` and landing pieces --
     is deferred to the execute step.
+
+    ``request_id`` tags the plan with the scheduler request that owns it,
+    so cross-user coalesced batches can be demuxed and a failing request
+    rolled back without touching its window neighbours; ``entries`` is
+    the file's (chunk_id, cluster_id) list (the same object handed to the
+    switching node's ``FileMeta``), used to decide whether this file
+    references a chunk copy whose pieces failed to land.
     """
 
     user: str
@@ -51,6 +58,8 @@ class UploadPlan:
     n_chunks: int
     n_unique_in_file: int
     encode_tasks: list[EncodeTask]
+    entries: list[tuple[bytes, int]] = dataclasses.field(default_factory=list)
+    request_id: int = -1
 
     @property
     def bytes_uploaded(self) -> int:
@@ -70,13 +79,19 @@ class FetchTask:
 
 @dataclasses.dataclass
 class RetrievalPlan:
-    """Control-plane result for one file retrieval."""
+    """Control-plane result for one file retrieval.
+
+    ``request_id`` tags the plan with its owning scheduler request so a
+    coalesced cross-user decode batch can be demuxed per request and a
+    failure (e.g. data loss) isolated to the request it belongs to.
+    """
 
     user: str
     filename: str
     meta: dedup.FileMeta
     fetch_tasks: list[FetchTask]
     share_bytes: dict[int, int]  # cluster -> decoded bytes (latency model)
+    request_id: int = -1
 
     @property
     def wire_bytes(self) -> int:

@@ -1,0 +1,200 @@
+"""Cross-user batch scheduler: the multi-user switching-node front end.
+
+SEARS's switching node is inherently multi-tenant -- it aggregates many
+users' upload/retrieval traffic before chunks ever reach the storage
+clusters (paper S II), and the retrieval-time win depends on keeping that
+aggregation path fast.  ``BatchScheduler`` models the aggregation:
+requests from any number of users queue in a ``RequestQueue``; each
+``flush()`` drains the queue and coalesces the queued requests into
+*shared* data-plane batches -- one SHA-1 launch and one GF(256) launch
+per length bucket across all users in the window -- then fans results
+back out per request.
+
+``SEARSStore.put_files``/``get_files`` are the batch-of-one special case:
+they build a single ``Request`` and push it through the same
+``_batch_put``/``_batch_get`` machinery, so a single-user call is just a
+one-user flush.
+
+Invariants (enforced by ``tests/test_scheduler.py``):
+
+* **Sequential equivalence** -- a flush produces byte-identical artifacts
+  (pieces on storage nodes, dedup ratio, ``StoreStats``, per-request
+  stats) to issuing the same requests one at a time through
+  ``put_files``/``get_files`` in submit order.  Coalescing changes launch
+  counts, never bytes.
+* **Per-request isolation** -- a failing request (out of storage, dead
+  nodes, missing file) is rolled back atomically: no phantom metadata, no
+  leaked reservations, and no effect on its window neighbours.  The one
+  deliberate coupling: a request that deduplicated against a *new* chunk
+  whose pieces failed to land fails too, instead of committing metadata
+  that points at bytes which do not exist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+PUT = "put"
+GET = "get"
+
+
+@dataclasses.dataclass
+class Request:
+    """One user's queued upload or retrieval (a unit of atomicity).
+
+    ``result`` for a put is ``list[UploadStats]``; for a get it is
+    ``list[tuple[bytes, RetrievalStats]]`` in ``filenames`` order.
+    """
+
+    request_id: int
+    user: str
+    kind: str  # PUT | GET
+    files: list[tuple[str, bytes]] | None = None  # put payload
+    filenames: list[str] | None = None  # get payload
+    timestamp: float = 0.0
+    local_chunk_ids: set[bytes] | None = None
+    rho_fn: Callable[[int], float] | None = None
+    status: str = "queued"  # queued | done | failed
+    result: Any = None
+    error: BaseException | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "done"
+
+
+class RequestQueue:
+    """FIFO of pending requests with monotonically increasing ids."""
+
+    def __init__(self) -> None:
+        self._pending: list[Request] = []
+        self._next_id = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def _submit(self, req: Request) -> Request:
+        self._pending.append(req)
+        return req
+
+    def submit_put(self, user: str, files: list[tuple[str, bytes]],
+                   timestamp: float = 0.0) -> Request:
+        req = Request(request_id=self._next_id, user=user, kind=PUT,
+                      files=list(files), timestamp=timestamp)
+        self._next_id += 1
+        return self._submit(req)
+
+    def submit_get(self, user: str, filenames: list[str],
+                   local_chunk_ids: set[bytes] | None = None,
+                   rho_fn: Callable[[int], float] | None = None) -> Request:
+        req = Request(request_id=self._next_id, user=user, kind=GET,
+                      filenames=list(filenames),
+                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn)
+        self._next_id += 1
+        return self._submit(req)
+
+    def drain(self) -> list[Request]:
+        pending, self._pending = self._pending, []
+        return pending
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Cumulative flush accounting (data-plane launches via kernels.ops)."""
+
+    n_flushes: int = 0
+    n_requests: int = 0
+    n_failed: int = 0
+    n_put_windows: int = 0  # coalesced put batches executed
+    n_get_windows: int = 0
+    gf_launches: int = 0  # GF(256) launches issued during flushes
+    sha1_launches: int = 0
+    flush_seconds: float = 0.0
+
+    @property
+    def data_plane_launches(self) -> int:
+        return self.gf_launches + self.sha1_launches
+
+
+class BatchScheduler:
+    """Coalesces many users' requests into shared data-plane batches.
+
+    Requests are drained in submit order and grouped into maximal
+    consecutive same-kind runs; each run becomes one coalesced
+    ``_batch_put``/``_batch_get`` window, so the all-puts-then-all-gets
+    pattern collapses to exactly two windows while mixed traffic keeps
+    its put/get ordering (a get submitted after a put in the same flush
+    still observes that put).
+    """
+
+    def __init__(self, store, queue: RequestQueue | None = None) -> None:
+        self.store = store
+        self.queue = queue or RequestQueue()
+        self.stats = SchedulerStats()
+
+    # ------------------------------------------------------------- submit --
+    def submit_put(self, user: str, files: list[tuple[str, bytes]],
+                   timestamp: float = 0.0) -> Request:
+        return self.queue.submit_put(user, files, timestamp=timestamp)
+
+    def submit_get(self, user: str, filenames: list[str],
+                   local_chunk_ids: set[bytes] | None = None,
+                   rho_fn: Callable[[int], float] | None = None) -> Request:
+        return self.queue.submit_get(user, filenames,
+                                     local_chunk_ids=local_chunk_ids,
+                                     rho_fn=rho_fn)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # -------------------------------------------------------------- flush --
+    def flush(self) -> list[Request]:
+        """Run every queued request through shared data-plane batches.
+
+        Returns the drained requests, each marked ``done`` (``result``
+        set) or ``failed`` (``error`` set) -- flush itself never raises on
+        a per-request failure.
+        """
+        from repro.kernels.launches import LAUNCHES  # dep-free counters
+
+        requests = self.queue.drain()
+        if not requests:
+            return []
+        before = LAUNCHES.snapshot()
+        t0 = time.perf_counter()
+        for window in self._windows(requests):
+            try:
+                if window[0].kind == PUT:
+                    self.store._batch_put(window)
+                    self.stats.n_put_windows += 1
+                else:
+                    self.store._batch_get(window)
+                    self.stats.n_get_windows += 1
+            except Exception as exc:
+                # backstop: _batch_put/_batch_get record per-request
+                # failures themselves, but if one raises anyway no request
+                # in the drained window may be silently lost
+                for r in window:
+                    if r.status == "queued":
+                        r.status, r.error = "failed", exc
+        delta = LAUNCHES.delta(before)
+        self.stats.n_flushes += 1
+        self.stats.n_requests += len(requests)
+        self.stats.n_failed += sum(1 for r in requests if not r.ok)
+        self.stats.gf_launches += delta.gf
+        self.stats.sha1_launches += delta.sha1
+        self.stats.flush_seconds += time.perf_counter() - t0
+        return requests
+
+    @staticmethod
+    def _windows(requests: list[Request]) -> list[list[Request]]:
+        windows: list[list[Request]] = []
+        for req in requests:
+            if windows and windows[-1][0].kind == req.kind:
+                windows[-1].append(req)
+            else:
+                windows.append([req])
+        return windows

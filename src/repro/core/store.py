@@ -20,6 +20,12 @@ bucket) across many files; ``put_file``/``get_file`` are the batch-of-one
 special case.  Both engines are byte-identical, so placement and stats do
 not depend on the engine choice.
 
+Many *users'* traffic coalesces the same way: ``scheduler()`` returns a
+``repro.core.scheduler.BatchScheduler`` whose flush windows share one
+data-plane batch across all queued requests (the paper's multi-user
+switching node); ``put_files``/``get_files`` are internally just a
+one-request flush of that machinery (``_batch_put``/``_batch_get``).
+
 Wall-clock retrieval time is simulated by ``repro.core.latency`` (no real
 network in this container); byte-level correctness is real -- every piece
 is stored, read back and decoded.
@@ -110,6 +116,23 @@ class SEARSStore:
             self.switching[user] = SwitchingNode(user)
         return self.switching[user]
 
+    # ------------------------------------------------------- scheduling ---
+    def scheduler(self, queue=None):
+        """A ``BatchScheduler`` coalescing many users' traffic on this store.
+
+        Requests submitted to the scheduler share data-plane batches (one
+        SHA-1 launch and one GF(256) launch per length bucket per flush
+        window across *all* queued users) while staying byte-identical to
+        sequential per-user ``put_files``/``get_files`` calls.
+        """
+        from repro.core.scheduler import BatchScheduler
+        return BatchScheduler(self, queue=queue)
+
+    def _one_request(self, req) -> None:
+        """Raise the failure of a batch-of-one request, if any."""
+        if req.error is not None:
+            raise req.error
+
     # ----------------------------------------------------------- upload ---
     def put_file(self, user: str, filename: str, data: bytes,
                  timestamp: float = 0.0) -> UploadStats:
@@ -120,57 +143,110 @@ class SEARSStore:
                   timestamp: float = 0.0) -> list[UploadStats]:
         """Upload a batch of files with batched data-plane work.
 
-        Hashing runs as one engine batch over every chunk of every file;
-        the control plane then plans the files *in order* (so later files
-        dedup against chunks introduced by earlier ones, exactly like
+        A one-user flush of the cross-user batch machinery: hashing runs
+        as one engine batch over every chunk of every file; the control
+        plane then plans the files *in order* (so later files dedup
+        against chunks introduced by earlier ones, exactly like
         sequential ``put_file`` calls); finally all new chunks across the
         batch are RS-encoded in one engine batch and landed per cluster
-        with the bulk store API.
+        with the bulk store API.  The call is atomic: any failure rolls
+        the whole batch back and re-raises.
         """
-        # data plane: chunk + hash everything in one batch
-        per_file: list[tuple[str, bytes, list[tuple[int, int]]]] = []
+        from repro.core.scheduler import PUT, Request
+        req = Request(request_id=0, user=user, kind=PUT, files=list(files),
+                      timestamp=timestamp)
+        self._batch_put([req])
+        self._one_request(req)
+        return req.result
+
+    def _batch_put(self, requests) -> None:
+        """Shared put window: coalesce many requests' data-plane work.
+
+        Each request (one user's file batch) is a unit of atomicity: a
+        plan-phase failure rolls back that request alone; an execute
+        failure rolls back exactly the requests whose files reference a
+        chunk copy that failed to land.  Surviving requests commit as if
+        the failed ones had been issued -- and failed -- separately.
+        Results/errors are recorded on the request objects; this method
+        raises nothing per-request.
+        """
+        # data plane: chunk + hash every file of every request in one batch;
+        # a malformed payload (non-bytes, bad pair) fails only its own
+        # request and its chunks stay out of the shared batch
+        chunked: list[list[tuple[str, bytes, list[tuple[int, int]],
+                                 list[bytes]]]] = []
         all_chunks: list[bytes] = []
-        for filename, data in files:
-            spans = self.chunker.chunk_spans(data)
-            view = memoryview(data)
-            all_chunks.extend(bytes(view[o:o + l]) for o, l in spans)
-            per_file.append((filename, data, spans))
+        for req in requests:
+            per_file = []
+            try:
+                for filename, data in req.files:
+                    spans = self.chunker.chunk_spans(data)
+                    view = memoryview(data)
+                    chunks = [bytes(view[o:o + l]) for o, l in spans]
+                    per_file.append((filename, data, spans, chunks))
+            except Exception as exc:
+                req.status, req.error = "failed", exc
+                chunked.append([])
+                continue
+            for _, _, _, chunks in per_file:
+                all_chunks.extend(chunks)
+            chunked.append(per_file)
         all_ids = self.engine.hash_chunks(all_chunks)
 
-        # control plane: plan each file in order (mutates index/meta).
-        # The batch is atomic: a failure in either phase (out of storage
-        # while planning, too few alive nodes while writing) rolls every
-        # planned file back -- no phantom metadata, no leaked
-        # reservations.
-        plans: list[UploadPlan] = []
+        # control plane: plan request by request in submit order (so later
+        # requests dedup against chunks introduced by earlier ones, exactly
+        # like sequential calls); a failure unwinds only its own request
+        plans_by_req: dict[int, list[UploadPlan]] = {}
         pos = 0
-        try:
-            for filename, data, spans in per_file:
-                n_spans = len(spans)
-                ids = all_ids[pos:pos + n_spans]
-                chunks = all_chunks[pos:pos + n_spans]
-                pos += n_spans
-                plans.append(self._plan_put(user, filename, data, spans,
-                                            ids, chunks, timestamp))
-        except Exception:
-            # plan-phase failure: nothing executed yet, so completed
-            # plans still hold their reservations (the partial plan
-            # cleaned itself up)
-            for p in plans:
-                for t in p.encode_tasks:
-                    self.clusters[t.cluster_id].release_reservation(
-                        self.n * t.piece_len)
-            self._rollback_files(user, plans)
-            raise
+        for req, per_file in zip(requests, chunked):
+            if req.error is not None:
+                continue
+            plans: list[UploadPlan] = []
+            req_pos = pos
+            pos += sum(len(spans) for _, _, spans, _ in per_file)
+            try:
+                for filename, data, spans, chunks in per_file:
+                    ids = all_ids[req_pos:req_pos + len(spans)]
+                    req_pos += len(spans)
+                    plans.append(self._plan_put(
+                        req.user, filename, data, spans, ids, chunks,
+                        req.timestamp, request_id=req.request_id))
+                plans_by_req[req.request_id] = plans
+            except Exception as exc:
+                # completed plans still hold their reservations (the
+                # partial plan cleaned itself up before propagating)
+                for p in plans:
+                    for t in p.encode_tasks:
+                        self.clusters[t.cluster_id].release_reservation(
+                            self.n * t.piece_len)
+                self._rollback_files(req.user, plans)
+                req.status, req.error = "failed", exc
 
-        # data plane: one encode batch + bulk piece writes
+        # data plane: one shared encode batch + bulk piece writes
+        live = [r for r in requests if r.error is None]
+        all_plans = [p for r in live for p in plans_by_req[r.request_id]]
         try:
-            self._execute_uploads(plans)  # releases all reservations
-        except Exception:
-            self._rollback_files(user, plans)
-            raise
+            failed_copies, write_error = self._execute_uploads(all_plans)
+        except Exception as exc:
+            # encode-batch failure: nothing landed, reservations already
+            # released -- every request in the window rolls back
+            for req in live:
+                self._rollback_files(req.user, plans_by_req[req.request_id])
+                req.status, req.error = "failed", exc
+            return
 
-        return [UploadStats(filename=p.filename, file_bytes=p.file_bytes,
+        for req in live:
+            plans = plans_by_req[req.request_id]
+            if failed_copies and any((cid, cl) in failed_copies
+                                     for p in plans for cid, cl in p.entries):
+                # this request references a chunk copy whose pieces never
+                # landed (its own new chunk, or a window-mate's it deduped
+                # against) -- roll it back rather than commit dangling meta
+                self._rollback_files(req.user, plans)
+                req.status, req.error = "failed", write_error
+                continue
+            req.result = [
+                UploadStats(filename=p.filename, file_bytes=p.file_bytes,
                             n_chunks=p.n_chunks,
                             n_unique_in_file=p.n_unique_in_file,
                             n_new_chunks=len(p.encode_tasks),
@@ -178,22 +254,29 @@ class SEARSStore:
                             piece_bytes_written=self.n * sum(
                                 t.piece_len for t in p.encode_tasks))
                 for p in plans]
+            req.status = "done"
 
     def _rollback_files(self, user: str, plans: list[UploadPlan]) -> None:
-        """Drop the metadata of planned files after a failed batch.
+        """Drop the metadata of planned files after a failure.
 
         ``delete_file`` releases the index references; new chunks hit
         refcount zero, which removes their index records and deletes any
-        pieces a partially-run execute phase already landed.
+        pieces a partially-run execute phase already landed.  A plan whose
+        file was since overwritten (its ``entries`` are no longer the live
+        meta) is skipped -- its references were already released by the
+        overwrite -- so rolling back one request never deletes a
+        neighbour's version of the same filename.
         """
         sw = self._switch(user)
-        for filename in {p.filename for p in plans}:
-            if filename in sw.table:
-                self.delete_file(user, filename)
+        for p in plans:
+            meta = sw.table.get(p.filename)
+            if meta is not None and meta.entries is p.entries:
+                self.delete_file(user, p.filename)
 
     def _plan_put(self, user: str, filename: str, data: bytes,
                   spans: list[tuple[int, int]], ids: list[bytes],
-                  chunks: list[bytes], timestamp: float) -> UploadPlan:
+                  chunks: list[bytes], timestamp: float,
+                  request_id: int = -1) -> UploadPlan:
         """Control plane for one file: dedup, placement, metadata.
 
         Index and chunk-meta-data mutations happen here; clusters chosen
@@ -248,13 +331,25 @@ class SEARSStore:
         sw.put_meta(filename, meta)
         self.logical_bytes += len(data)
         self.n_files += 1
+        # the plan shares the *same* entries object as the stored meta, so
+        # rollback can tell "this file is still my version" by identity
         return UploadPlan(user=user, filename=filename, timestamp=timestamp,
                           file_bytes=len(data), n_chunks=len(ids),
                           n_unique_in_file=len(unique_ids),
-                          encode_tasks=tasks)
+                          encode_tasks=tasks, entries=entries,
+                          request_id=request_id)
 
-    def _execute_uploads(self, plans: list[UploadPlan]) -> None:
-        """Data plane: batched RS encode + bulk per-cluster piece writes."""
+    def _execute_uploads(self, plans: list[UploadPlan]
+                         ) -> tuple[set[tuple[bytes, int]], Exception | None]:
+        """Data plane: batched RS encode + bulk per-cluster piece writes.
+
+        Returns ``(failed_copies, error)``: the (chunk_id, cluster_id)
+        copies whose pieces could not be stored (dead-node writes) and the
+        first write error, so the caller can demux the failure back to the
+        requests that reference those copies.  Cluster writes are
+        independent -- one failing cluster never aborts the others.  An
+        encode-batch failure raises (after releasing all reservations).
+        """
         tasks = [t for p in plans for t in p.encode_tasks]
         # a later file in the batch may have overwritten/deleted an earlier
         # one; drop tasks whose chunk copy is no longer indexed
@@ -272,20 +367,25 @@ class SEARSStore:
         try:
             pieces_per_task = self.engine.encode_blobs(
                 self.code, [t.data for t in live])  # coding nodes
-            by_cluster: dict[int, list[tuple[bytes, list[bytes]]]] = {}
-            for t, pieces in zip(live, pieces_per_task):
-                by_cluster.setdefault(t.cluster_id, []).append(
-                    (t.chunk_id, pieces))
-            for cluster_id, items in by_cluster.items():
-                self.clusters[cluster_id].store_chunks(
-                    items, min_pieces=self.k,
-                    reserved=reserved.pop(cluster_id))
-        finally:
-            # a failure (encode or a cluster write) aborts the loop; drop
-            # the reservations of every cluster not reached so their free
-            # space is not understated forever
+        except Exception:
             for cluster_id, nbytes in reserved.items():
                 self.clusters[cluster_id].release_reservation(nbytes)
+            raise
+        by_cluster: dict[int, list[tuple[bytes, list[bytes]]]] = {}
+        for t, pieces in zip(live, pieces_per_task):
+            by_cluster.setdefault(t.cluster_id, []).append(
+                (t.chunk_id, pieces))
+        failed: set[tuple[bytes, int]] = set()
+        error: Exception | None = None
+        for cluster_id, items in by_cluster.items():
+            try:
+                self.clusters[cluster_id].store_chunks(
+                    items, min_pieces=self.k,
+                    reserved=reserved.pop(cluster_id, 0))
+            except Exception as exc:  # store_chunks released the bytes
+                failed.update((cid, cluster_id) for cid, _ in items)
+                error = error or exc
+        return failed, error
 
     # --------------------------------------------------------- download ---
     def get_file(self, user: str, filename: str,
@@ -300,39 +400,108 @@ class SEARSStore:
                   rho_fn=None) -> list[tuple[bytes, RetrievalStats]]:
         """Retrieve a batch of files with one batched decode.
 
-        Piece reads are bulk per cluster (modeling per-batch parallel
-        node requests rather than serial per-chunk fetches) and all
-        non-systematic decodes across the batch share engine launches.
+        A one-user flush of the cross-user batch machinery: piece reads
+        are bulk per cluster (modeling per-batch parallel node requests
+        rather than serial per-chunk fetches) and all non-systematic
+        decodes across the batch share engine launches.  Any failure
+        (missing file, unrecoverable chunk) raises.
         """
-        plans = [self._plan_get(user, fn, local_chunk_ids)
-                 for fn in filenames]
+        from repro.core.scheduler import GET, Request
+        req = Request(request_id=0, user=user, kind=GET,
+                      filenames=list(filenames),
+                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn)
+        self._batch_get([req])
+        self._one_request(req)
+        return req.result
 
-        # data plane: bulk piece reads per cluster, then batched decode
-        all_tasks = [t for p in plans for t in p.fetch_tasks]
-        by_cluster: dict[int, list[FetchTask]] = {}
-        for t in all_tasks:
-            by_cluster.setdefault(t.cluster_id, []).append(t)
-        for cluster_id, tasks in by_cluster.items():
-            got = self.clusters[cluster_id].read_pieces_batch(
-                [t.chunk_id for t in tasks], self.k)
-            for t in tasks:
-                t.pieces = got[t.chunk_id]
-        blobs = self.engine.decode_blobs(
-            self.code, [(t.pieces, t.length) for t in all_tasks])
+    def _batch_get(self, requests) -> None:
+        """Shared get window: coalesce many requests' reads and decodes.
 
-        # assemble + stats per file
-        out: list[tuple[bytes, RetrievalStats]] = []
-        task_iter = iter(zip(all_tasks, blobs))
-        for plan in plans:
-            by_cid = {}
-            for _ in plan.fetch_tasks:
-                t, blob = next(task_iter)
-                by_cid[t.chunk_id] = blob
-            out.append(self._assemble(plan, by_cid, rho_fn))
-        return out
+        All requests' missing chunks are fetched with one bulk read per
+        cluster and decoded in one shared engine batch.  Failures stay
+        per-request: a missing file or an unrecoverable chunk (< k live
+        pieces) fails only the request that referenced it -- its jobs are
+        excluded from the shared decode so a neighbour's batch is never
+        poisoned.  Results/errors are recorded on the request objects.
+        """
+        plans_by_req: dict[int, list[RetrievalPlan]] = {}
+        for req in requests:
+            try:
+                plans_by_req[req.request_id] = [
+                    self._plan_get(req.user, fn, req.local_chunk_ids,
+                                   request_id=req.request_id)
+                    for fn in req.filenames]
+            except Exception as exc:
+                req.status, req.error = "failed", exc
+
+        # data plane: bulk piece reads per cluster across every request;
+        # reads have no store side effects, so an infrastructure failure
+        # here fails the window's requests instead of raising out of a
+        # flush whose queue was already drained
+        live = [r for r in requests if r.error is None]
+        try:
+            all_tasks = [t for r in live for p in plans_by_req[r.request_id]
+                         for t in p.fetch_tasks]
+            by_cluster: dict[int, list[FetchTask]] = {}
+            for t in all_tasks:
+                by_cluster.setdefault(t.cluster_id, []).append(t)
+            for cluster_id, tasks in by_cluster.items():
+                got = self.clusters[cluster_id].read_pieces_batch(
+                    [t.chunk_id for t in tasks], self.k)
+                for t in tasks:
+                    t.pieces = got[t.chunk_id]
+        except Exception as exc:
+            for req in live:
+                req.status, req.error = "failed", exc
+            return
+
+        # demux data loss to its request before the shared decode so one
+        # unrecoverable chunk cannot poison the whole window
+        for req in live:
+            for p in plans_by_req[req.request_id]:
+                for t in p.fetch_tasks:
+                    if len(t.pieces) < self.k and req.error is None:
+                        req.status = "failed"
+                        req.error = ValueError(
+                            f"need >= k={self.k} pieces to decode, got "
+                            f"{len(t.pieces)} (chunk {t.chunk_id.hex()})")
+        live = [r for r in live if r.error is None]
+
+        # shared decode, deduplicated: a chunk referenced by several tasks
+        # (cross-user or cross-file redundancy) is decoded once and the
+        # blob fanned back out to every referencing plan
+        uniq: dict[tuple[bytes, int], FetchTask] = {}
+        for req in live:
+            for p in plans_by_req[req.request_id]:
+                for t in p.fetch_tasks:
+                    uniq.setdefault((t.chunk_id, t.cluster_id), t)
+        try:
+            blobs = self.engine.decode_blobs(
+                self.code, [(t.pieces, t.length) for t in uniq.values()])
+        except Exception as exc:
+            for req in live:
+                req.status, req.error = "failed", exc
+            return
+        blob_by_key = dict(zip(uniq, blobs))
+
+        # assemble + stats per file, fanned back out per request (a bad
+        # per-request rho_fn fails only its own request)
+        for req in live:
+            try:
+                out = [self._assemble(
+                    plan,
+                    {t.chunk_id: blob_by_key[(t.chunk_id, t.cluster_id)]
+                     for t in plan.fetch_tasks},
+                    req.rho_fn) for plan in plans_by_req[req.request_id]]
+            except Exception as exc:
+                req.status, req.error = "failed", exc
+                continue
+            req.result = out
+            req.status = "done"
 
     def _plan_get(self, user: str, filename: str,
-                  local_chunk_ids: set[bytes] | None) -> RetrievalPlan:
+                  local_chunk_ids: set[bytes] | None,
+                  request_id: int = -1) -> RetrievalPlan:
         """Control plane: meta lookup + unique-missing-chunk fetch list."""
         sw = self._switch(user)
         meta = sw.get_meta(filename)
@@ -354,7 +523,8 @@ class SEARSStore:
             share_bytes[cluster_id] = (share_bytes.get(cluster_id, 0)
                                        + info.length)
         return RetrievalPlan(user=user, filename=filename, meta=meta,
-                             fetch_tasks=tasks, share_bytes=share_bytes)
+                             fetch_tasks=tasks, share_bytes=share_bytes,
+                             request_id=request_id)
 
     def _assemble(self, plan: RetrievalPlan, decoded: dict[bytes, bytes],
                   rho_fn) -> tuple[bytes, RetrievalStats]:

@@ -154,18 +154,70 @@ def generate_events(cfg: WorkloadConfig) -> Iterator[FileEvent]:
                             img.tobytes(), "backup")
 
 
-def _personal_bytes(seed: int, size: int, pool: _BlockPool,
-                    cfg: WorkloadConfig) -> bytes:
-    """Deterministic personal-file content: shared-pool + private blocks."""
+def _mixed_bytes(seed: int, size: int, pool: _BlockPool,
+                 shared_fraction: float, block: int) -> bytes:
+    """Deterministic file content: shared-pool + private random blocks."""
     r = np.random.default_rng(seed)
     out = bytearray()
     while len(out) < size:
-        if r.random() < cfg.shared_fraction:
+        if r.random() < shared_fraction:
             out += pool.get(int(r.integers(pool.count)))
         else:
-            out += r.integers(0, 256, size=cfg.block,
+            out += r.integers(0, 256, size=block,
                               dtype=np.int64).astype(np.uint8).tobytes()
     return bytes(out[:size])
+
+
+def _personal_bytes(seed: int, size: int, pool: _BlockPool,
+                    cfg: WorkloadConfig) -> bytes:
+    """Deterministic personal-file content: shared-pool + private blocks."""
+    return _mixed_bytes(seed, size, pool, cfg.shared_fraction, cfg.block)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiUserConfig:
+    """Trace shape for the cross-user batch scheduler (switching node).
+
+    Many users upload concurrently; a configurable fraction of each
+    user's content comes from a shared block pool, so coalesced windows
+    carry the inter-user redundancy the scheduler's shared dedup/coding
+    batches are built to exploit.
+    """
+
+    n_users: int = 8
+    files_per_user: int = 4
+    file_kb: int = 48
+    shared_fraction: float = 0.4  # of each file drawn from the shared pool
+    block: int = 8 << 10
+    seed: int = 23
+
+
+def multi_user_put_trace(cfg: MultiUserConfig
+                         ) -> list[tuple[str, list[tuple[str, bytes]]]]:
+    """Per-user upload batches: one (user, files) put request each.
+
+    Deterministic in ``cfg.seed``.  Files mix user-private bytes with
+    blocks from a cross-user shared pool, mirroring the paper workload's
+    inter-user redundancy at request granularity.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pool = _BlockPool(rng, cfg.block, count=256)
+    trace: list[tuple[str, list[tuple[str, bytes]]]] = []
+    for u in range(cfg.n_users):
+        files: list[tuple[str, bytes]] = []
+        for f in range(cfg.files_per_user):
+            blob = _mixed_bytes(cfg.seed * 1_000_003 + u * 997 + f,
+                                cfg.file_kb << 10, pool,
+                                cfg.shared_fraction, cfg.block)
+            files.append((f"u{u}/f{f}", blob))
+        trace.append((f"user{u}", files))
+    return trace
+
+
+def multi_user_get_trace(put_trace: list[tuple[str, list[tuple[str, bytes]]]]
+                         ) -> list[tuple[str, list[str]]]:
+    """Matching retrieval requests: every user re-fetches its own files."""
+    return [(user, [fn for fn, _ in files]) for user, files in put_trace]
 
 
 def request_trace(cfg: WorkloadConfig, events: list[FileEvent],

@@ -65,19 +65,32 @@ def _gf_matmul_padded(gbits: jnp.ndarray, data: jnp.ndarray,
     )(gbits, data)
 
 
+@functools.lru_cache(maxsize=None)
+def _gbits_cached(mbytes: bytes, r: int, k: int) -> jnp.ndarray:
+    """GF(2) bit-plane lift of an (r,k) coding matrix, memoized by content.
+
+    The lift is pure host work (8r x 8k numpy assembly) that used to run
+    on every call; coding matrices come from the lru-cached
+    ``rs_code.generator_matrix``/``decode_matrix`` so the working set is a
+    handful of entries reused for the life of the process.
+    """
+    M = np.frombuffer(mbytes, dtype=np.uint8).reshape(r, k)
+    return jnp.asarray(gf256.gf_matrix_to_bits(M), dtype=jnp.float32)
+
+
 def gf_matmul(M: np.ndarray, data: jnp.ndarray,
               interpret: bool = True) -> jnp.ndarray:
     """Apply an (r,k) GF(256) coding matrix to (B, k, L) uint8 pieces.
 
     Returns (B, r, L) uint8.  ``M`` must be a host numpy matrix (it is
-    lifted to its GF(2) bit-matrix once and closed over).
+    lifted to its GF(2) bit-matrix once per distinct matrix and cached).
     """
     data = jnp.asarray(data, jnp.uint8)
     if data.ndim == 2:
         data = data[None]
     B, k, L = data.shape
-    gbits = jnp.asarray(gf256.gf_matrix_to_bits(np.asarray(M)),
-                        dtype=jnp.float32)
+    Mnp = np.ascontiguousarray(np.asarray(M, dtype=np.uint8))
+    gbits = _gbits_cached(Mnp.tobytes(), *Mnp.shape)
     pad = (-L) % TILE_L
     if pad:
         data = jnp.pad(data, ((0, 0), (0, 0), (0, pad)))

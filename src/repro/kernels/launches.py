@@ -1,0 +1,36 @@
+"""Data-plane launch counting, dependency-free.
+
+Lives apart from ``ops`` so batching layers (``core.scheduler``,
+benchmarks) can read the counters without importing jax and the Pallas
+kernel modules — a NumpyEngine store never pays that import just to
+snapshot counts that stay zero on its path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class LaunchCounter:
+    """Data-plane dispatch counts (one increment per device launch)."""
+
+    gf: int = 0  # GF(256) matmul launches (encode + decode buckets)
+    sha1: int = 0  # SHA-1 batch launches
+
+    @property
+    def total(self) -> int:
+        return self.gf + self.sha1
+
+    def snapshot(self) -> "LaunchCounter":
+        return dataclasses.replace(self)
+
+    def delta(self, since: "LaunchCounter") -> "LaunchCounter":
+        return LaunchCounter(gf=self.gf - since.gf,
+                             sha1=self.sha1 - since.sha1)
+
+    def reset(self) -> None:
+        self.gf = self.sha1 = 0
+
+
+LAUNCHES = LaunchCounter()

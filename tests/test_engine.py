@@ -86,6 +86,44 @@ def test_kernel_engine_hashes_match_hashlib():
         hashlib.sha1(c).digest() for c in chunks]
 
 
+def test_kernel_engine_hash_launch_shapes_stay_fixed(monkeypatch):
+    """Oversized chunks must not widen the compiled (B, M, 16) launch.
+
+    The engine docstring promises "compile once, reuse forever": every
+    SHA-1 launch has the fixed (hash_batch, blocks(max_hash_len), 16)
+    shape.  A chunk longer than ``max_hash_len`` used to silently grow
+    the block axis (``sha1_pad_batch`` took ``max`` of the cap and the
+    batch's own need); now it takes the host fallback instead.
+    """
+    from repro.kernels import ops
+
+    eng = KernelEngine(hash_batch=8, max_hash_len=1024)
+    fixed_blocks = (1024 + 9 + 63) // 64
+    seen_shapes = []
+    real = ops.sha1_digest_words
+
+    def spy(blocks, counts, impl="kernel"):
+        seen_shapes.append(blocks.shape)
+        return real(blocks, counts, impl=impl)
+
+    monkeypatch.setattr(ops, "sha1_digest_words", spy)
+    chunks = [_data(100, seed=1), _data(5000, seed=2),  # 5000 > max_hash_len
+              _data(1024, seed=3), _data(0, seed=4), _data(30_000, seed=5)]
+    digests = eng.hash_chunks(chunks)
+    assert digests == [hashlib.sha1(c).digest() for c in chunks]
+    assert seen_shapes == [(8, fixed_blocks, 16)]  # one launch, fixed shape
+
+
+def test_sha1_pad_batch_max_len_is_authoritative():
+    """The cap is exact: always that many blocks, overflow raises."""
+    from repro.core import hashing
+
+    blocks, counts = hashing.sha1_pad_batch([b"x" * 10], max_len=1024)
+    assert blocks.shape == (1, (1024 + 9 + 63) // 64, 16)
+    with pytest.raises(ValueError, match="oversized"):
+        hashing.sha1_pad_batch([b"x" * 5000], max_len=1024)
+
+
 def test_make_engine_specs():
     assert isinstance(make_engine("numpy"), NumpyEngine)
     assert isinstance(make_engine("kernel"), KernelEngine)

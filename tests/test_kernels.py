@@ -3,6 +3,12 @@
 Kernels run in interpret mode on CPU (the kernel body itself executes);
 oracles are the ``ref.py`` functions, themselves pinned to independent
 host references (python GF tables, sequential gear hash, hashlib).
+
+Interpret mode executes the Pallas kernel bodies in Python, so those
+sweeps take minutes on CPU: they are marked ``@pytest.mark.slow`` and
+deselected from the default tier-1 run (see pytest.ini; run them with
+``make test-slow``).  The ref-oracle-vs-host pins stay in tier-1 so the
+kernels' semantic contracts remain covered by the fast lane.
 """
 
 import hashlib
@@ -18,6 +24,7 @@ from repro.core.rs_code import RSCode, decode_matrix, generator_matrix
 from repro.kernels import ops, ref
 
 
+@pytest.mark.slow
 # ------------------------------------------------------------ gf_matmul ----
 @pytest.mark.parametrize("n,k", [(10, 5), (6, 4), (4, 2), (10, 9), (3, 1)])
 @pytest.mark.parametrize("B,L", [(1, 64), (3, 512), (2, 1000), (1, 4096)])
@@ -41,6 +48,7 @@ def test_gf_matmul_ref_vs_host_numpy():
     np.testing.assert_array_equal(host, dev)
 
 
+@pytest.mark.slow
 def test_gf_matmul_encode_decode_roundtrip_kernel():
     rng = np.random.RandomState(1)
     code = RSCode(10, 5)
@@ -51,6 +59,7 @@ def test_gf_matmul_encode_decode_roundtrip_kernel():
     np.testing.assert_array_equal(rec, data)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(st.integers(1, 8), st.integers(0, 10**6))
 def test_gf_matmul_property_random_matrices(k, seed):
@@ -63,6 +72,7 @@ def test_gf_matmul_property_random_matrices(k, seed):
         np.asarray(ops.rs_apply(M, data, impl="ref")))
 
 
+@pytest.mark.slow
 # ------------------------------------------------------------- gear_cdc ----
 @pytest.mark.parametrize("n", [1, 31, 32, 100, 8192, 8193, 20000])
 def test_gear_kernel_vs_ref(n):
@@ -80,6 +90,7 @@ def test_gear_ref_vs_sequential_oracle():
                                   gear_hash_sequential(data))
 
 
+@pytest.mark.slow
 def test_gear_kernel_tile_boundary_exactness():
     # values spanning the 8192-byte tile boundary depend on the halo
     rng = np.random.RandomState(6)
@@ -90,6 +101,7 @@ def test_gear_kernel_tile_boundary_exactness():
     np.testing.assert_array_equal(out, seq)
 
 
+@pytest.mark.slow
 # ----------------------------------------------------------------- sha1 ----
 @pytest.mark.parametrize("sizes", [
     [0], [1], [55], [56], [64], [119], [200, 3, 64, 0, 1000],
@@ -114,6 +126,7 @@ def test_sha1_ref_vs_hashlib_batch():
     assert got == [hashlib.sha1(c).digest() for c in chunks]
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(st.lists(st.binary(min_size=0, max_size=400), min_size=1, max_size=6))
 def test_sha1_kernel_property(chunks):
@@ -121,12 +134,14 @@ def test_sha1_kernel_property(chunks):
     assert got == [hashlib.sha1(c).digest() for c in chunks]
 
 
+@pytest.mark.slow
 def test_sha1_large_batch_crosses_tile():
     chunks = [bytes([i % 256]) * (i % 300) for i in range(300)]  # > TILE_B
     got = ops.sha1_digests(chunks, impl="kernel")
     assert got == [hashlib.sha1(c).digest() for c in chunks]
 
 
+@pytest.mark.slow
 # ------------------------------------------------- end-to-end kernel path --
 def test_store_with_device_hash_path():
     """SEARSStore using the batched device SHA-1 for chunk ids."""

@@ -1,0 +1,291 @@
+"""Cross-user batch scheduler: equivalence and isolation contracts.
+
+Two invariants (see ``repro.core.scheduler``):
+
+* coalescing N users' traffic into shared data-plane batches is
+  byte-identical to sequential per-user ``put_files``/``get_files`` --
+  same pieces on every node, same dedup ratio, same ``StoreStats``;
+* one user's failed request rolls back atomically (no phantom metadata,
+  no leaked reservations, no dangling index records) without poisoning
+  the other requests in the same flush window.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import NodeDownError
+from repro.core.scheduler import BatchScheduler, RequestQueue
+from repro.core.store import SEARSStore
+
+
+def _data(n, seed=0):
+    return np.random.default_rng(seed).integers(
+        0, 256, size=n, dtype=np.int64).astype(np.uint8).tobytes()
+
+
+def _store(**kw):
+    kw.setdefault("num_clusters", 6)
+    kw.setdefault("node_capacity", 64 << 20)
+    kw.setdefault("binding", "ulb")
+    kw.setdefault("engine", "kernel")
+    return SEARSStore(n=10, k=5, seed=11, **kw)
+
+
+def _multi_user_files(n_users=4, shared=None):
+    """Per-user batches with a cross-user shared blob and duplicates."""
+    shared = shared or _data(30_000, seed=100)
+    out = {}
+    for u in range(n_users):
+        user = f"user{u}"
+        out[user] = [
+            (f"{user}/a", _data(20_000 + 3000 * u, seed=u) + shared),
+            (f"{user}/b", _data(9_000, seed=50 + u)),
+            (f"{user}/dup-a", _data(20_000 + 3000 * u, seed=u) + shared),
+        ]
+    return out
+
+
+# ------------------------------------------------------------ queue API ----
+def test_request_queue_fifo_and_ids():
+    q = RequestQueue()
+    r1 = q.submit_put("alice", [("f", b"x")])
+    r2 = q.submit_get("bob", ["g"])
+    assert (r1.request_id, r2.request_id) == (0, 1)
+    assert len(q) == 2
+    drained = q.drain()
+    assert drained == [r1, r2] and len(q) == 0
+    assert r1.kind == "put" and r2.kind == "get"
+    assert not r1.ok and r1.status == "queued"
+
+
+def test_flush_empty_queue_is_noop():
+    s = _store(engine="numpy")
+    sched = s.scheduler()
+    assert sched.flush() == []
+    assert sched.stats.n_flushes == 0
+
+
+def test_windows_group_consecutive_kinds():
+    q = RequestQueue()
+    kinds = ["put", "put", "get", "put", "get", "get"]
+    reqs = [q.submit_put("u", [("f", b"")]) if k == "put"
+            else q.submit_get("u", ["f"]) for k in kinds]
+    windows = BatchScheduler._windows(reqs)
+    assert [[r.kind for r in w] for w in windows] == \
+        [["put", "put"], ["get"], ["put"], ["get", "get"]]
+
+
+# ------------------------------------------------------- differential ------
+@pytest.mark.parametrize("engine", ["numpy", "kernel"])
+def test_coalesced_equals_sequential_per_user(engine):
+    """N users through one flush == the same users called sequentially."""
+    files_by_user = _multi_user_files(n_users=4)
+
+    seq = _store(engine=engine)
+    seq_up = {u: seq.put_files(u, fs) for u, fs in files_by_user.items()}
+
+    coal = _store(engine=engine)
+    sched = coal.scheduler()
+    reqs = {u: sched.submit_put(u, fs) for u, fs in files_by_user.items()}
+    sched.flush()
+    assert all(r.ok for r in reqs.values()), \
+        [r.error for r in reqs.values() if r.error]
+
+    # identical per-request stats, StoreStats, dedup ratio and placement
+    for u, r in reqs.items():
+        assert r.result == seq_up[u]
+    assert seq.stats() == coal.stats()
+    assert seq.stats().dedup_ratio == coal.stats().dedup_ratio
+    for c_seq, c_coal in zip(seq.clusters, coal.clusters):
+        for n_seq, n_coal in zip(c_seq.nodes, c_coal.nodes):
+            assert n_seq._pieces == n_coal._pieces  # bytes on nodes
+
+    # retrieval: coalesced gets return the same bytes and stats
+    seq_out = {u: seq.get_files(u, [fn for fn, _ in fs])
+               for u, fs in files_by_user.items()}
+    get_reqs = {u: sched.submit_get(u, [fn for fn, _ in fs])
+                for u, fs in files_by_user.items()}
+    sched.flush()
+    for u, r in get_reqs.items():
+        assert r.ok
+        for (fn, blob), (o_seq, st_seq), (o_coal, st_coal) in zip(
+                files_by_user[u], seq_out[u], r.result):
+            assert o_coal == o_seq == blob
+            assert (st_seq.n_fetched, st_seq.bytes_fetched,
+                    st_seq.clusters_touched) == \
+                (st_coal.n_fetched, st_coal.bytes_fetched,
+                 st_coal.clusters_touched)
+
+
+def test_coalesced_cross_user_dedup_under_clb():
+    """Global-scope (CLB) dedup across users works inside one window."""
+    blob = _data(40_000, seed=7)
+    seq = _store(binding="clb")
+    for u in ("alice", "bob", "carol"):
+        seq.put_files(u, [(f"{u}/f", blob)])
+
+    coal = _store(binding="clb")
+    sched = coal.scheduler()
+    reqs = [sched.submit_put(u, [(f"{u}/f", blob)])
+            for u in ("alice", "bob", "carol")]
+    sched.flush()
+    assert all(r.ok for r in reqs)
+    # later requests dedup against the first request's chunks
+    assert sum(s.n_new_chunks for s in reqs[1].result) == 0
+    assert sum(s.n_new_chunks for s in reqs[2].result) == 0
+    assert seq.stats() == coal.stats()
+
+
+def test_scheduler_counts_shared_launches():
+    """One flush window shares SHA-1/GF launches across all users."""
+    files_by_user = _multi_user_files(n_users=4)
+    s = _store(engine="kernel")
+    sched = s.scheduler()
+    for u, fs in files_by_user.items():
+        sched.submit_put(u, fs)
+    sched.flush()
+    # every user's chunks fit one fixed-shape SHA-1 launch
+    assert sched.stats.sha1_launches == 1
+    assert sched.stats.n_put_windows == 1
+    assert sched.stats.gf_launches >= 1
+
+
+# ------------------------------------------------------------- isolation ---
+def test_plan_failure_isolated_to_one_request():
+    """An out-of-storage user rolls back; window neighbours commit."""
+    # one cluster, tiny capacity: big request cannot fit, small ones can
+    s = SEARSStore(n=10, k=5, num_clusters=1, node_capacity=120_000,
+                   binding="ulb", engine="kernel", seed=2)
+    sched = s.scheduler()
+    ok1 = sched.submit_put("alice", [("a", _data(12_000, seed=1))])
+    bad = sched.submit_put("greedy", [("g", _data(1_000_000, seed=2))])
+    ok2 = sched.submit_put("bob", [("b", _data(12_000, seed=3))])
+    sched.flush()
+
+    assert ok1.ok and ok2.ok
+    assert bad.status == "failed"
+    assert isinstance(bad.error, RuntimeError)  # out of storage
+    # failed request left nothing behind
+    assert "g" not in s.switching["greedy"].table
+    assert all(c._reserved == 0 for c in s.clusters)
+    # neighbours are fully retrievable
+    assert s.get_file("alice", "a")[0] == _data(12_000, seed=1)
+    assert s.get_file("bob", "b")[0] == _data(12_000, seed=3)
+    # store state equals a sequential run where the failed call raised
+    seq = SEARSStore(n=10, k=5, num_clusters=1, node_capacity=120_000,
+                     binding="ulb", engine="kernel", seed=2)
+    seq.put_files("alice", [("a", _data(12_000, seed=1))])
+    with pytest.raises(RuntimeError):
+        seq.put_files("greedy", [("g", _data(1_000_000, seed=2))])
+    seq.put_files("bob", [("b", _data(12_000, seed=3))])
+    assert seq.stats() == s.stats()
+
+
+def test_malformed_payload_fails_only_its_request():
+    """A non-bytes payload fails in the shared chunk phase; flush never
+    raises and window neighbours still commit."""
+    s = _store(engine="numpy")
+    sched = s.scheduler()
+    ok1 = sched.submit_put("alice", [("a", _data(12_000, seed=1))])
+    bad = sched.submit_put("mallory", [("m", "not-bytes")])
+    ok2 = sched.submit_put("bob", [("b", _data(12_000, seed=3))])
+    sched.flush()
+    assert ok1.ok and ok2.ok
+    assert bad.status == "failed" and bad.error is not None
+    assert ("mallory" not in s.switching
+            or "m" not in s.switching["mallory"].table)
+    assert s.get_file("alice", "a")[0] == _data(12_000, seed=1)
+    assert s.get_file("bob", "b")[0] == _data(12_000, seed=3)
+
+
+def test_bad_rho_fn_fails_only_its_request():
+    """A get whose rho_fn raises fails alone after the shared decode."""
+    s = _store(engine="numpy")
+    blob = _data(25_000, seed=4)
+    s.put_file("alice", "a", blob)
+    s.put_file("bob", "b", blob)
+
+    def boom(cluster_id):
+        raise RuntimeError("bad rho")
+
+    sched = s.scheduler()
+    good = sched.submit_get("alice", ["a"])
+    bad = sched.submit_get("bob", ["b"], rho_fn=boom)
+    sched.flush()
+    assert good.ok and good.result[0][0] == blob
+    assert bad.status == "failed"
+    assert isinstance(bad.error, RuntimeError)
+
+
+def test_get_failure_isolated_to_one_request():
+    """A get of a missing file fails alone; the rest of the window works."""
+    s = _store()
+    blob = _data(25_000, seed=4)
+    s.put_file("alice", "a", blob)
+    sched = s.scheduler()
+    good = sched.submit_get("alice", ["a"])
+    missing = sched.submit_get("bob", ["nope"])
+    sched.flush()
+    assert good.ok and good.result[0][0] == blob
+    assert missing.status == "failed"
+    assert isinstance(missing.error, KeyError)
+
+
+def test_data_loss_poisons_only_owning_request():
+    """< k live pieces fails the affected request, not its neighbours."""
+    s = _store(num_clusters=2)
+    blob_a, blob_b = _data(30_000, seed=5), _data(30_000, seed=6)
+    s.put_file("alice", "a", blob_a)  # ULB: alice -> cluster 0
+    s.put_file("bob", "b", blob_b)  # bob -> cluster 1
+    alice_clusters = {cl for _, cl in
+                      s.switching["alice"].get_meta("a").entries}
+    lost = next(c for c in s.clusters if c.cluster_id in alice_clusters)
+    lost.kill_nodes(list(range(6)))  # 6 > n-k: alice's chunks unrecoverable
+
+    sched = s.scheduler()
+    r_alice = sched.submit_get("alice", ["a"])
+    r_bob = sched.submit_get("bob", ["b"])
+    sched.flush()
+    assert r_alice.status == "failed"
+    assert isinstance(r_alice.error, ValueError)
+    assert r_bob.ok and r_bob.result[0][0] == blob_b
+
+
+def test_write_failure_rolls_back_owner_and_dedup_dependents():
+    """Pieces that cannot land fail every request referencing them."""
+    blob = _data(30_000, seed=8)
+    s = _store(binding="clb", num_clusters=2)
+    for c in s.clusters:
+        c.kill_nodes(list(range(6)))  # 4 alive < k everywhere
+
+    sched = s.scheduler()
+    first = sched.submit_put("alice", [("a", blob)])
+    # bob dedups against alice's (new, never-landed) chunks -> must fail too
+    dependent = sched.submit_put("bob", [("b", blob)])
+    sched.flush()
+    assert first.status == "failed" and dependent.status == "failed"
+    assert isinstance(first.error, NodeDownError)
+    # nothing left behind by either request
+    assert s.stats().n_unique_chunks == 0
+    assert s.n_files == 0 and s.logical_bytes == 0
+    assert all(c._reserved == 0 for c in s.clusters)
+    assert "a" not in s.switching["alice"].table
+    assert "b" not in s.switching["bob"].table
+    # store stays usable once nodes return
+    for c in s.clusters:
+        c.revive_nodes(list(range(6)))
+    s.put_file("alice", "a", blob)
+    assert s.get_file("alice", "a")[0] == blob
+
+
+def test_mixed_window_put_then_get_same_flush():
+    """A get submitted after a put in the same flush sees the put."""
+    s = _store()
+    blob = _data(15_000, seed=9)
+    sched = s.scheduler()
+    p = sched.submit_put("alice", [("f", blob)])
+    g = sched.submit_get("alice", ["f"])
+    sched.flush()
+    assert p.ok and g.ok
+    assert g.result[0][0] == blob
+    assert sched.stats.n_put_windows == 1 and sched.stats.n_get_windows == 1
