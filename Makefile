@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-fast bench bench-pipeline bench-smoke headline
+.PHONY: test test-slow test-fast test-launches bench bench-pipeline \
+	bench-smoke headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -12,10 +13,15 @@ test:
 test-slow:
 	$(PYTHON) -m pytest -x -q -m slow
 
+# dispatch-regression lane (also a CI job): a put window must stay
+# O(1) gear + O(1) SHA-1 + O(buckets) GF launches, no gear retraces
+test-launches:
+	$(PYTHON) -m pytest -x -q tests/test_ingest.py
+
 # skip the slow model/kernel suites; storage core only
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
-		tests/test_scheduler.py \
+		tests/test_scheduler.py tests/test_ingest.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py
 

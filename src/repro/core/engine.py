@@ -26,14 +26,24 @@ import abc
 
 import numpy as np
 
-from repro.core import hashing
+from repro.core import chunking, hashing
+from repro.core.chunking import Chunker
 from repro.core.rs_code import RSCode
 
 
 class CodingEngine(abc.ABC):
-    """Bulk hash/encode/decode over batches of chunks (the data plane)."""
+    """Bulk chunk/hash/encode/decode over batches of files (the data plane)."""
 
     name: str = "base"
+
+    @abc.abstractmethod
+    def chunk_blobs(self, chunker: Chunker,
+                    blobs: list[bytes]) -> list[list[tuple[int, int]]]:
+        """CDC spans for a batch of files: one rolling-hash pass per window.
+
+        Returns per-blob ``[(offset, length), ...]`` lists, byte-identical
+        to ``chunker.chunk_spans`` on each blob individually.
+        """
 
     @abc.abstractmethod
     def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
@@ -58,6 +68,12 @@ class NumpyEngine(CodingEngine):
 
     def __init__(self, hash_fn=hashing.chunk_id) -> None:
         self.hash_fn = hash_fn
+
+    def chunk_blobs(self, chunker: Chunker,
+                    blobs: list[bytes]) -> list[list[tuple[int, int]]]:
+        # vectorized host path: one fused gear pass over the whole window
+        return chunking.chunk_spans_batch(chunker, blobs,
+                                          chunking.gear_candidates_np)
 
     def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
         return [self.hash_fn(c) for c in chunks]
@@ -101,6 +117,15 @@ class KernelEngine(CodingEngine):
         self.impl = impl
         self.max_hash_len = max_hash_len
         self.hash_batch = hash_batch or self.HASH_BATCH
+
+    def chunk_blobs(self, chunker: Chunker,
+                    blobs: list[bytes]) -> list[list[tuple[int, int]]]:
+        """One device gear launch per window; greedy selection on host."""
+        from repro.kernels import ops
+        return chunking.chunk_spans_batch(
+            chunker, blobs,
+            lambda stream, mask: ops.gear_candidate_positions(
+                stream, mask, impl=self.impl))
 
     def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
         if self.hash_fn is not hashing.chunk_id:

@@ -40,6 +40,23 @@ PUT = "put"
 GET = "get"
 
 
+def _put_payload_bytes(files) -> int:
+    """Queued put bytes for auto-flush accounting; never raises.
+
+    A malformed pair (or payload without a length) counts zero here and
+    fails only its own request at flush time -- submit must not raise
+    after the request is already enqueued.
+    """
+    nbytes = 0
+    for pair in files:
+        try:
+            _, data = pair
+            nbytes += len(data)
+        except Exception:
+            continue
+    return nbytes
+
+
 @dataclasses.dataclass
 class Request:
     """One user's queued upload or retrieval (a unit of atomicity).
@@ -109,13 +126,15 @@ class SchedulerStats:
     n_failed: int = 0
     n_put_windows: int = 0  # coalesced put batches executed
     n_get_windows: int = 0
+    n_auto_flushes: int = 0  # flushes triggered by size/interval thresholds
     gf_launches: int = 0  # GF(256) launches issued during flushes
     sha1_launches: int = 0
+    gear_launches: int = 0  # device chunking launches issued during flushes
     flush_seconds: float = 0.0
 
     @property
     def data_plane_launches(self) -> int:
-        return self.gf_launches + self.sha1_launches
+        return self.gf_launches + self.sha1_launches + self.gear_launches
 
 
 class BatchScheduler:
@@ -127,28 +146,81 @@ class BatchScheduler:
     pattern collapses to exactly two windows while mixed traffic keeps
     its put/get ordering (a get submitted after a put in the same flush
     still observes that put).
+
+    **Auto-flush**: with ``flush_bytes`` set, a submit that lifts the
+    pending put payload to/over the threshold flushes the whole queue
+    immediately; with ``flush_interval`` set, a submit arriving more than
+    that many seconds after the window's first pending request does the
+    same (submit-driven -- no background thread; call ``poll()`` from an
+    external ticker to close out an idle window).  Auto-flushed windows
+    run the exact same ``flush()`` path, so they are byte-identical to
+    manual flushes of the same queue.
     """
 
-    def __init__(self, store, queue: RequestQueue | None = None) -> None:
+    def __init__(self, store, queue: RequestQueue | None = None,
+                 flush_bytes: int | None = None,
+                 flush_interval: float | None = None,
+                 clock: Callable[[], float] = time.monotonic) -> None:
         self.store = store
         self.queue = queue or RequestQueue()
         self.stats = SchedulerStats()
+        self.flush_bytes = flush_bytes
+        self.flush_interval = flush_interval
+        self._clock = clock
+        self._pending_bytes = 0
+        self._window_opened: float | None = None
 
     # ------------------------------------------------------------- submit --
     def submit_put(self, user: str, files: list[tuple[str, bytes]],
                    timestamp: float = 0.0) -> Request:
-        return self.queue.submit_put(user, files, timestamp=timestamp)
+        req = self.queue.submit_put(user, files, timestamp=timestamp)
+        # count from the queue's materialized copy -- the caller's `files`
+        # may be a generator the queue already exhausted
+        self._note_submit(_put_payload_bytes(req.files))
+        return req
 
     def submit_get(self, user: str, filenames: list[str],
                    local_chunk_ids: set[bytes] | None = None,
                    rho_fn: Callable[[int], float] | None = None) -> Request:
-        return self.queue.submit_get(user, filenames,
-                                     local_chunk_ids=local_chunk_ids,
-                                     rho_fn=rho_fn)
+        req = self.queue.submit_get(user, filenames,
+                                    local_chunk_ids=local_chunk_ids,
+                                    rho_fn=rho_fn)
+        self._note_submit(0)
+        return req
+
+    def _note_submit(self, nbytes: int) -> None:
+        if self._window_opened is None:
+            self._window_opened = self._clock()
+        self._pending_bytes += nbytes
+        if self._should_auto_flush():
+            self.stats.n_auto_flushes += 1
+            self.flush()
+
+    def _should_auto_flush(self) -> bool:
+        if self.flush_bytes is not None and \
+                self._pending_bytes >= self.flush_bytes:
+            return True
+        return (self.flush_interval is not None
+                and self._window_opened is not None
+                and self._clock() - self._window_opened
+                >= self.flush_interval)
+
+    def poll(self) -> list[Request]:
+        """Flush if a time-triggered window has expired (external ticker)."""
+        if len(self.queue) and self.flush_interval is not None \
+                and self._should_auto_flush():
+            self.stats.n_auto_flushes += 1
+            return self.flush()
+        return []
 
     @property
     def pending(self) -> int:
         return len(self.queue)
+
+    @property
+    def pending_bytes(self) -> int:
+        """Put payload bytes queued in the current window."""
+        return self._pending_bytes
 
     # -------------------------------------------------------------- flush --
     def flush(self) -> list[Request]:
@@ -161,6 +233,8 @@ class BatchScheduler:
         from repro.kernels.launches import LAUNCHES  # dep-free counters
 
         requests = self.queue.drain()
+        self._pending_bytes = 0
+        self._window_opened = None
         if not requests:
             return []
         before = LAUNCHES.snapshot()
@@ -186,6 +260,7 @@ class BatchScheduler:
         self.stats.n_failed += sum(1 for r in requests if not r.ok)
         self.stats.gf_launches += delta.gf
         self.stats.sha1_launches += delta.sha1
+        self.stats.gear_launches += delta.gear
         self.stats.flush_seconds += time.perf_counter() - t0
         return requests
 

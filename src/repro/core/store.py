@@ -11,10 +11,11 @@ Composes the paper's pipeline end to end:
             chunks already in the device's local store -> k-of-n piece
             reads per missing chunk -> GF(256) decode -> reassemble.
 
-Architecture: a **control plane** (``plan_*`` -- chunk boundaries, dedup
-lookups, binding/placement, reservations; pure per-chunk metadata) feeds a
-**data plane** (a ``repro.core.engine.CodingEngine`` -- batched SHA-1,
-RS encode, RS decode over bulk bytes).  ``put_files``/``get_files``
+Architecture: a **control plane** (``plan_*`` -- dedup lookups,
+binding/placement, reservations; pure per-chunk metadata) feeds a
+**data plane** (a ``repro.core.engine.CodingEngine`` -- batched CDC
+chunking, SHA-1, RS encode, RS decode over bulk bytes; the whole put
+window is chunked in one gear pass).  ``put_files``/``get_files``
 amortize one data-plane batch (and on TPU, one kernel launch per length
 bucket) across many files; ``put_file``/``get_file`` are the batch-of-one
 special case.  Both engines are byte-identical, so placement and stats do
@@ -37,7 +38,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import dedup, hashing
+from repro.core import chunking, dedup, hashing
 from repro.core.binding import make_binding
 from repro.core.chunking import DEFAULT_CHUNKER, Chunker
 from repro.core.cluster import Cluster, SwitchingNode
@@ -170,27 +171,50 @@ class SEARSStore:
         Results/errors are recorded on the request objects; this method
         raises nothing per-request.
         """
-        # data plane: chunk + hash every file of every request in one batch;
-        # a malformed payload (non-bytes, bad pair) fails only its own
-        # request and its chunks stay out of the shared batch
-        chunked: list[list[tuple[str, bytes, list[tuple[int, int]],
-                                 list[bytes]]]] = []
-        all_chunks: list[bytes] = []
+        # data plane: chunk + hash every file of every request in one batch.
+        # Payloads are normalized per request first (a malformed payload --
+        # non-bytes, bad pair -- fails only its own request and stays out
+        # of the shared batch); the surviving window then runs through one
+        # engine chunking pass (one gear launch) and one hash batch.
+        validated: list[list[tuple[str, bytes, np.ndarray]]] = []
         for req in requests:
             per_file = []
             try:
                 for filename, data in req.files:
-                    spans = self.chunker.chunk_spans(data)
-                    view = memoryview(data)
-                    chunks = [bytes(view[o:o + l]) for o, l in spans]
-                    per_file.append((filename, data, spans, chunks))
+                    per_file.append((filename, data,
+                                     chunking.as_bytes_array(data)))
             except Exception as exc:
                 req.status, req.error = "failed", exc
-                chunked.append([])
-                continue
-            for _, _, _, chunks in per_file:
+                per_file = []
+            validated.append(per_file)
+
+        window_blobs = [arr for per_file in validated
+                        for _, _, arr in per_file]
+        try:
+            window_spans = self.engine.chunk_blobs(self.chunker,
+                                                   window_blobs)
+        except Exception as exc:
+            # shared chunk-pass failure: nothing planned or landed yet --
+            # every live request in the window fails (mirrors the shared
+            # encode-batch failure path)
+            for req in requests:
+                if req.error is None:
+                    req.status, req.error = "failed", exc
+            return
+
+        chunked: list[list[tuple[str, bytes, list[tuple[int, int]],
+                                 list[bytes]]]] = []
+        all_chunks: list[bytes] = []
+        blob_pos = 0
+        for req, per_file in zip(requests, validated):
+            out = []
+            for filename, data, arr in per_file:
+                spans = window_spans[blob_pos]
+                blob_pos += 1
+                chunks = [arr[o:o + l].tobytes() for o, l in spans]
+                out.append((filename, data, spans, chunks))
                 all_chunks.extend(chunks)
-            chunked.append(per_file)
+            chunked.append(out)
         all_ids = self.engine.hash_chunks(all_chunks)
 
         # control plane: plan request by request in submit order (so later

@@ -25,10 +25,44 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.chunking import GEAR_TABLE, WINDOW
+from repro.kernels.launches import TRACES
 
 TILE = 8192  # output bytes per grid cell
 
 _GEAR_I32 = GEAR_TABLE.view(np.int32)  # bit-identical reinterpret
+
+
+@functools.lru_cache(maxsize=1)
+def _device_gear_table() -> jnp.ndarray:
+    """Device-resident gear table, uploaded once per process."""
+    return jnp.asarray(_GEAR_I32).view(jnp.uint32)
+
+
+def bucket_len(n: int) -> int:
+    """Padded stream length for ``n`` bytes: a power-of-two multiple of TILE.
+
+    ``_gear_hash_padded`` compiles once per distinct padded length, so an
+    ingest path hashing arbitrary-size windows must quantize lengths or it
+    retraces on every new size.  Power-of-two tile counts bound the set of
+    compiled shapes to log2(N/TILE) while wasting at most 2x compute.
+    """
+    tiles = max(1, -(-n // TILE))
+    return TILE * (1 << (tiles - 1).bit_length())
+
+
+def pad_to_bucket(data):
+    """Zero-pad a (N,) uint8 array (np or jnp) to ``bucket_len(N)``.
+
+    The single place that applies the bucketing contract -- every gear
+    entry point (Pallas wrapper and the jitted ref oracles in ``ops``)
+    pads through here so the compiled-shape set stays in lockstep.
+    """
+    n = data.shape[0]
+    pad = bucket_len(n) - n
+    if pad:
+        xp = jnp if isinstance(data, jnp.ndarray) else np
+        return xp.pad(data, (0, pad))
+    return data
 
 
 def _kernel(cur_ref, prev_ref, gear_ref, out_ref):
@@ -52,10 +86,11 @@ def _kernel(cur_ref, prev_ref, gear_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _gear_hash_padded(data: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
+def _gear_hash_padded(data: jnp.ndarray, gear: jnp.ndarray,
+                      interpret: bool = True) -> jnp.ndarray:
+    TRACES.gear += 1  # trace-time only: one increment per compiled shape
     n = data.shape[0]
     grid = (n // TILE,)
-    gear = jnp.asarray(_GEAR_I32).view(jnp.uint32)
     return pl.pallas_call(
         _kernel,
         grid=grid,
@@ -71,12 +106,16 @@ def _gear_hash_padded(data: jnp.ndarray, interpret: bool = True) -> jnp.ndarray:
 
 
 def gear_hash(data, interpret: bool = True) -> jnp.ndarray:
-    """(N,) uint8 -> (N,) uint32 gear hash (kernel entry point)."""
+    """(N,) uint8 -> (N,) uint32 gear hash (kernel entry point).
+
+    Input is zero-padded to ``bucket_len(n)`` so repeated calls with
+    varying lengths reuse a bounded set of compiled launches; zero pad
+    bytes only influence hash positions >= n, which are sliced off (the
+    gear window looks strictly backward).
+    """
     data = jnp.asarray(data, jnp.uint8)
     n = data.shape[0]
     if n == 0:
         return jnp.zeros((0,), jnp.uint32)
-    pad = (-n) % TILE
-    if pad:
-        data = jnp.pad(data, (0, pad))
-    return _gear_hash_padded(data, interpret=interpret)[:n]
+    return _gear_hash_padded(pad_to_bucket(data), _device_gear_table(),
+                             interpret=interpret)[:n]

@@ -17,20 +17,28 @@ class LaunchCounter:
 
     gf: int = 0  # GF(256) matmul launches (encode + decode buckets)
     sha1: int = 0  # SHA-1 batch launches
+    gear: int = 0  # gear CDC rolling-hash launches (chunking stream)
 
     @property
     def total(self) -> int:
-        return self.gf + self.sha1
+        return self.gf + self.sha1 + self.gear
 
     def snapshot(self) -> "LaunchCounter":
         return dataclasses.replace(self)
 
     def delta(self, since: "LaunchCounter") -> "LaunchCounter":
         return LaunchCounter(gf=self.gf - since.gf,
-                             sha1=self.sha1 - since.sha1)
+                             sha1=self.sha1 - since.sha1,
+                             gear=self.gear - since.gear)
 
     def reset(self) -> None:
-        self.gf = self.sha1 = 0
+        self.gf = self.sha1 = self.gear = 0
 
 
 LAUNCHES = LaunchCounter()
+
+# Retrace counts: incremented *at trace time* inside the jitted data-plane
+# entry points, so a counter that keeps growing across same-bucket calls
+# is a jit-cache miss (the retrace bug the bucketed padding fixes).  One
+# increment per (function, shape) compilation, not per call.
+TRACES = LaunchCounter()

@@ -33,9 +33,10 @@ def _on_tpu() -> bool:
 
 
 # ------------------------------------------------------- launch counting ---
-# re-exported for existing callers; the counter itself lives in a
+# re-exported for existing callers; the counters themselves live in a
 # dependency-free module so readers need not import jax
-from repro.kernels.launches import LAUNCHES, LaunchCounter  # noqa: E402
+from repro.kernels.launches import (LAUNCHES, TRACES,  # noqa: E402,F401
+                                    LaunchCounter)
 
 
 # ---------------------------------------------------------------- GF matmul
@@ -117,11 +118,67 @@ def rs_decode_blobs(code, jobs: list[tuple[dict[int, bytes], int]],
 
 
 # ------------------------------------------------------------------ gear ---
+@jax.jit
+def _gear_ref_padded(data: jnp.ndarray) -> jnp.ndarray:
+    """Jit-cached gear oracle; compiles once per bucketed stream length."""
+    TRACES.gear += 1  # trace-time only: one increment per compiled shape
+    return ref.gear_hash_ref(data)
+
+
 def gear_hash(data, impl: str = "kernel") -> jnp.ndarray:
-    """(N,) uint8 -> (N,) uint32 CDC rolling hash."""
+    """(N,) uint8 -> (N,) uint32 CDC rolling hash (device-resident result).
+
+    The input is zero-padded to ``gear_cdc.bucket_len`` so varying
+    lengths reuse a bounded set of compiled launches (pad positions only
+    affect hashes at offsets >= N, which are sliced off -- the gear
+    window looks strictly backward).  Counted in ``LAUNCHES.gear``.
+    """
+    data = np.asarray(data, np.uint8)
+    n = data.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.uint32)
+    LAUNCHES.gear += 1
     if impl == "ref":
-        return ref.gear_hash_ref(jnp.asarray(data, jnp.uint8))
+        return _gear_ref_padded(gear_cdc.pad_to_bucket(data))[:n]
     return gear_cdc.gear_hash(data, interpret=not _on_tpu())
+
+
+def gear_hash_stream(data, impl: str = "kernel") -> np.ndarray:
+    """One gear launch over a whole ingest stream -> host (N,) uint32."""
+    data = np.asarray(data, np.uint8)
+    if data.shape[0] == 0:
+        return np.zeros((0,), np.uint32)
+    return np.asarray(gear_hash(data, impl=impl))
+
+
+@jax.jit
+def _gear_fire_ref(data: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Jit-cached fused gear hash + boundary mask test -> (N,) bool."""
+    TRACES.gear += 1  # trace-time only: one increment per compiled shape
+    return (ref.gear_hash_ref(data) & mask) == 0
+
+
+def gear_candidate_positions(data, mask, impl: str = "kernel") -> np.ndarray:
+    """One gear launch over an ingest stream -> sorted candidate positions.
+
+    The device twin of ``chunking.gear_candidates_np``: the 32-tap hash
+    and the boundary mask test run on the device (one bucketed launch,
+    bool fire bitmap shipped back instead of the 4-byte-per-position hash
+    array); the sparse ``flatnonzero`` compaction stays on the host.
+    """
+    data = np.asarray(data, np.uint8)
+    n = data.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int64)
+    LAUNCHES.gear += 1
+    mask = jnp.uint32(np.uint32(mask))
+    if impl == "ref":
+        fire = np.asarray(_gear_fire_ref(gear_cdc.pad_to_bucket(data),
+                                         mask))[:n]
+    else:
+        h = gear_cdc.gear_hash(data, interpret=not _on_tpu())
+        fire = np.asarray((h & mask) == 0)
+    return np.flatnonzero(fire).astype(np.int64)
 
 
 # ----------------------------------------------------------- attention ----
