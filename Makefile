@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow test-fast test-launches bench bench-pipeline \
-	bench-smoke headline
+	bench-smoke bench-repair headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -14,14 +14,16 @@ test-slow:
 	$(PYTHON) -m pytest -x -q -m slow
 
 # dispatch-regression lane (also a CI job): a put window must stay
-# O(1) gear + O(1) SHA-1 + O(buckets) GF launches, no gear retraces
+# O(1) gear + O(1) SHA-1 + O(buckets) GF launches with no gear retraces,
+# and a storm repair pass must stay O(buckets) per sub-batch, not O(chunks)
 test-launches:
-	$(PYTHON) -m pytest -x -q tests/test_ingest.py
+	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py
 
 # skip the slow model/kernel suites; storage core only
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
 		tests/test_scheduler.py tests/test_ingest.py \
+		tests/test_repair.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py
 
@@ -33,10 +35,16 @@ bench:
 bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
 
-# quick CI smoke: data-plane pipeline + cross-user scheduler benchmarks
-# (BENCH_pipeline.json + BENCH_scheduler.json)
+# quick CI smoke: data-plane pipeline + cross-user scheduler + storm
+# repair benchmarks (BENCH_pipeline.json + BENCH_scheduler.json +
+# BENCH_repair.json)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench
+
+# failure-storm repair: per-chunk vs batched cross-cluster rebuild on
+# both engines (BENCH_repair.json)
+bench-repair:
+	$(PYTHON) -m benchmarks.run --only repair_bench
 
 # headline 3 MB retrieval claim; ENGINE=numpy|kernel
 ENGINE ?= numpy

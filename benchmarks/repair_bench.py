@@ -1,0 +1,168 @@
+"""Failure-storm repair: batched cross-cluster rebuild benchmark.
+
+Builds two identical stores, ingests the same multi-user trace, replays
+the same seeded failure storm (kills + factory-fresh replacements, no
+in-trace repairs), then rebuilds the missing pieces two ways:
+
+* ``per-chunk`` -- a ``RepairManager`` with ``sub_batch=1``: every chunk
+  pays its own decode launch (when non-systematic) and its own encode
+  launch, the pre-batching repair loop.
+* ``batched``  -- the real cross-cluster path: sub-batches of up to
+  ``SUB_BATCH`` chunks spanning all degraded clusters, one decode + one
+  encode engine batch each, so a sub-batch costs O(length buckets)
+  GF launches instead of O(chunks).
+
+For each engine we record rebuilt-pieces/s, GF launch counts, the
+``sub_batch_factor`` (chunks per sub-batch over the per-sub-batch launch
+allowance) and assert the two ways leave byte-identical stores with every
+file readable.  Results land in ``BENCH_repair.json``; ``check()`` fails
+the run if batched repair stops beating per-chunk repair launch counts by
+at least the sub-batch factor.
+
+Both paths run after an untimed warmup pass so the kernel-engine numbers
+isolate repair scheduling, not JIT compilation.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import make_store
+from repro.core.repair import RepairManager
+from repro.core.workload import (MultiUserConfig, StormConfig, apply_storm,
+                                 failure_storm_trace, multi_user_put_trace)
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_repair.json")
+
+SUB_BATCH = 64  # batched-path sub-batch size (several windows per storm)
+# launch allowance per sub-batch: decode buckets (distinct survivor-set x
+# piece-length combinations) + encode buckets (distinct piece lengths) --
+# a generous constant bound; the point is it does not scale with chunks
+MAX_LAUNCHES_PER_SUB_BATCH = 16
+
+
+def _launches():
+    from repro.kernels.launches import LAUNCHES
+    return LAUNCHES
+
+
+def _stormed_store(engine: str, cfg: MultiUserConfig, storm) -> object:
+    store = make_store("ulb", clusters=6, node_capacity=1 << 30,
+                       engine=engine)
+    for user, files in multi_user_put_trace(cfg):
+        store.put_files(user, files)
+    apply_storm(store, storm)
+    return store
+
+
+def _run_repair(engine: str, cfg: MultiUserConfig, storm,
+                sub_batch: int) -> dict:
+    store = _stormed_store(engine, cfg, storm)
+    manager = RepairManager(store, sub_batch=sub_batch)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    report = manager.repair()
+    dt = time.perf_counter() - t0
+    return {"store": store, "report": report, "s": dt,
+            "gf_launches": _launches().delta(before).gf}
+
+
+def _assert_identical(cfg: MultiUserConfig, a: dict, b: dict) -> None:
+    sa, sb = a["store"], b["store"]
+    for ca, cb in zip(sa.clusters, sb.clusters):
+        for na, nb in zip(ca.nodes, cb.nodes):
+            assert na._pieces == nb._pieces, "repair paths diverged on nodes"
+    for user, files in multi_user_put_trace(cfg):
+        names = [fn for fn, _ in files]
+        for store in (sa, sb):
+            for (out, _), (fn, blob) in zip(store.get_files(user, names),
+                                            files):
+                assert out == blob, f"repair corrupted {user}/{fn}"
+
+
+def run(quick: bool = True) -> list[dict]:
+    cfg = MultiUserConfig(n_users=4, files_per_user=6 if quick else 10,
+                          file_kb=64 if quick else 192,
+                          shared_fraction=0.2, seed=29)
+    storm = failure_storm_trace(StormConfig(
+        n_clusters=6, n_steps=2, storm_clusters=6, kills_per_storm=2,
+        revive_prob=1.0, replace_fraction=1.0, repair_every_step=False,
+        seed=17))
+
+    rows = []
+    for engine in ("numpy", "kernel"):
+        # untimed warmup (jit-compiles the kernel engine's batch shapes)
+        _run_repair(engine, cfg, storm, SUB_BATCH)
+        per_chunk = _run_repair(engine, cfg, storm, sub_batch=1)
+        batched = _run_repair(engine, cfg, storm, SUB_BATCH)
+        _assert_identical(cfg, per_chunk, batched)
+
+        rep_b, rep_p = batched["report"], per_chunk["report"]
+        assert rep_b.balanced and rep_p.balanced, "repair ledger unbalanced"
+        assert rep_b.pieces_rebuilt == rep_p.pieces_rebuilt
+        assert not rep_b.unrecoverable, "safe storm lost data"
+        n_repaired = len(rep_b.rebuilt)
+        factor = n_repaired / max(
+            1, rep_b.n_sub_batches * MAX_LAUNCHES_PER_SUB_BATCH)
+        rows.append({
+            "name": f"repair/{engine}",
+            "engine": engine,
+            "n_chunks_scanned": rep_b.n_scanned,
+            "n_chunks_repaired": n_repaired,
+            "pieces_rebuilt": rep_b.pieces_rebuilt,
+            "n_sub_batches": rep_b.n_sub_batches,
+            "per_chunk": {
+                "s": round(per_chunk["s"], 4),
+                "pieces_per_s": round(
+                    rep_p.pieces_rebuilt / max(1e-9, per_chunk["s"]), 1),
+                "gf_launches": per_chunk["gf_launches"],
+            },
+            "batched": {
+                "s": round(batched["s"], 4),
+                "pieces_per_s": round(
+                    rep_b.pieces_rebuilt / max(1e-9, batched["s"]), 1),
+                "gf_launches": batched["gf_launches"],
+            },
+            "launch_reduction": round(
+                per_chunk["gf_launches"] / max(1, batched["gf_launches"]), 2),
+            "sub_batch_factor": round(factor, 2),
+            "identical_artifacts": True,
+        })
+    with open(_OUT, "w") as f:
+        json.dump({"sub_batch": SUB_BATCH, "results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        if not r["identical_artifacts"]:
+            fails.append(f"{r['name']}: artifacts diverged")
+        if r["engine"] != "kernel":
+            continue  # numpy path is host-side: no launches to count
+        bound = r["n_sub_batches"] * MAX_LAUNCHES_PER_SUB_BATCH
+        if r["batched"]["gf_launches"] > bound:
+            fails.append(
+                f"{r['name']}: batched repair re-serialized -- "
+                f"{r['batched']['gf_launches']} GF launches for "
+                f"{r['n_sub_batches']} sub-batches (allowance {bound})")
+        if r["per_chunk"]["gf_launches"] < r["n_chunks_repaired"]:
+            fails.append(f"{r['name']}: per-chunk baseline under-counts")
+        if r["sub_batch_factor"] < 2:
+            fails.append(
+                f"{r['name']}: storm too small to exercise batching "
+                f"(factor {r['sub_batch_factor']})")
+        if r["launch_reduction"] < r["sub_batch_factor"]:
+            fails.append(
+                f"{r['name']}: batched repair beat per-chunk by only "
+                f"{r['launch_reduction']}x < sub-batch factor "
+                f"{r['sub_batch_factor']}x")
+    return fails
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

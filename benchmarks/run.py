@@ -24,6 +24,7 @@ MODULES = [
     "headline_3mb",
     "pipeline_bench",
     "scheduler_bench",
+    "repair_bench",
     "kernel_bench",
     "checkpoint_bench",
 ]

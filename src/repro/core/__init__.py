@@ -7,6 +7,7 @@ from repro.core.engine import (CodingEngine, KernelEngine, NumpyEngine,
 from repro.core.hashing import chunk_id, fast_chunk_id
 from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
+from repro.core.repair import RepairManager, RepairReport
 from repro.core.rs_code import RSCode
 from repro.core.scheduler import BatchScheduler, Request, RequestQueue
 from repro.core.store import SEARSStore
@@ -15,6 +16,7 @@ __all__ = [
     "ChunkLevelBinding", "UserLevelBinding", "make_binding",
     "Chunker", "DEFAULT_CHUNKER", "chunk_id", "fast_chunk_id",
     "CodingEngine", "KernelEngine", "NumpyEngine", "make_engine",
-    "LatencyParams", "calibrate", "RADMADStore", "RSCode", "SEARSStore",
+    "LatencyParams", "calibrate", "RADMADStore", "RepairManager",
+    "RepairReport", "RSCode", "SEARSStore",
     "BatchScheduler", "Request", "RequestQueue",
 ]

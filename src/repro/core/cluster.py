@@ -30,6 +30,10 @@ class NodeDownError(RuntimeError):
     pass
 
 
+class PieceConflictError(RuntimeError):
+    """A re-put carried *different* bytes for an existing piece slot."""
+
+
 @dataclasses.dataclass
 class StorageNode:
     node_id: int
@@ -46,7 +50,14 @@ class StorageNode:
             raise NodeDownError(f"node {self.node_id} is down")
         key = (chunk_id, piece_idx)
         if key in self._pieces:
-            return  # idempotent
+            # idempotent only for byte-identical content: a re-put that
+            # carries different bytes is a coding/repair bug that would
+            # otherwise corrupt the piece silently
+            if self._pieces[key] != piece:
+                raise PieceConflictError(
+                    f"node {self.node_id}: conflicting re-put of chunk "
+                    f"{chunk_id.hex()} piece {piece_idx}")
+            return
         if self.used + len(piece) > self.capacity:
             raise CapacityError(f"node {self.node_id} full")
         self._pieces[key] = piece
@@ -65,9 +76,36 @@ class StorageNode:
         if piece is not None:
             self.used -= len(piece)
 
+    def wipe(self) -> None:
+        """Factory-reset the node (replacement hardware): drop all pieces."""
+        self._pieces.clear()
+        self.used = 0
+
     @property
     def free(self) -> int:
         return self.capacity - self.used
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkHealth:
+    """Per-chunk survivorship snapshot from :meth:`Cluster.piece_census`.
+
+    ``holders`` are alive nodes currently serving their piece (the decode
+    survivor set); ``missing`` are alive nodes whose piece is absent (the
+    rebuild targets of a repair pass).  Dead nodes appear in neither --
+    they can neither serve reads nor accept writes.
+    """
+
+    holders: tuple[int, ...]
+    missing: tuple[int, ...]
+
+    @property
+    def whole(self) -> bool:
+        """No alive node is missing its piece -- nothing to rebuild."""
+        return not self.missing
+
+    def recoverable(self, k: int) -> bool:
+        return len(self.holders) >= k
 
 
 class Cluster:
@@ -160,6 +198,30 @@ class Cluster:
                         pending.discard(cid)
         return out
 
+    def piece_census(self, chunk_ids: list[bytes]
+                     ) -> dict[bytes, ChunkHealth]:
+        """Bulk survivor / missing-piece scan for a set of chunks.
+
+        One walk over the nodes (one bulk health request per node, the
+        same wire pattern as :meth:`read_pieces_batch`) classifying every
+        (chunk, node) slot: alive-and-holding -> ``holders``,
+        alive-without-piece -> ``missing``, dead -> neither.  The repair
+        planner prioritizes by ``len(holders)`` and targets ``missing``.
+        """
+        holders: dict[bytes, list[int]] = {cid: [] for cid in chunk_ids}
+        missing: dict[bytes, list[int]] = {cid: [] for cid in chunk_ids}
+        for node in self.nodes:
+            if not node.alive:
+                continue
+            for cid in holders:
+                if node.has(cid, node.node_id):
+                    holders[cid].append(node.node_id)
+                else:
+                    missing[cid].append(node.node_id)
+        return {cid: ChunkHealth(holders=tuple(holders[cid]),
+                                 missing=tuple(missing[cid]))
+                for cid in chunk_ids}
+
     def delete_chunk(self, chunk_id: bytes) -> None:
         for node in self.nodes:
             node.delete(chunk_id, node.node_id)
@@ -182,6 +244,16 @@ class Cluster:
 
     def revive_nodes(self, ids: list[int]) -> None:
         for i in ids:
+            self.nodes[i].alive = True
+
+    def replace_nodes(self, ids: list[int]) -> None:
+        """Swap failed nodes for factory-fresh replacements.
+
+        The replacement comes up alive but *empty* -- its pieces are gone
+        until a repair pass rebuilds them (degraded redundancy window).
+        """
+        for i in ids:
+            self.nodes[i].wipe()
             self.nodes[i].alive = True
 
     def set_stragglers(self, ids: list[int], factor: float) -> None:

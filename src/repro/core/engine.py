@@ -60,6 +60,20 @@ class CodingEngine(abc.ABC):
                      ) -> list[bytes]:
         """Reconstruct each blob from (piece_map, nbytes) jobs."""
 
+    def recode_blobs(self, code: RSCode,
+                     jobs: list[tuple[dict[int, bytes], int]]
+                     ) -> tuple[list[bytes], list[list[bytes]]]:
+        """Repair path: decode (piece_map, nbytes) jobs, re-encode to n.
+
+        One decode batch plus one encode batch, so a repair sub-batch
+        costs O(length buckets) launches regardless of how many chunks --
+        across how many clusters -- it carries.  Returns ``(blobs,
+        pieces_per_blob)``; shared by both engines through their batched
+        ``decode_blobs``/``encode_blobs``.
+        """
+        blobs = self.decode_blobs(code, jobs)
+        return blobs, self.encode_blobs(code, blobs)
+
 
 class NumpyEngine(CodingEngine):
     """Per-chunk host path: hashlib + one numpy GF matmul per chunk."""

@@ -1,0 +1,328 @@
+"""Failure-storm repair: prioritized cross-cluster rebuild (paper S II, IV).
+
+SEARS's reliability rests on erasure-coded clusters being rebuilt before a
+second failure strikes.  After a failure storm many clusters are degraded
+at once, and the chunks at greatest risk are the ones with the fewest
+surviving pieces -- those must be rebuilt first, while fully healthy
+chunks must not cost any data-plane work at all.
+
+``RepairManager`` owns that process:
+
+* **scan** -- a bulk :meth:`Cluster.piece_census` per cluster classifies
+  every chunk copy: *whole* (skipped), *degraded* (queued, priority =
+  fewest surviving pieces first), or *unrecoverable right now* (< k
+  surviving pieces; recorded, re-queued in case a later revive helps).
+* **queue** -- a persistent priority queue shared by full scans and
+  *read-repair hints*: a degraded ``get`` (non-systematic piece set)
+  enqueues the chunk it touched, so hot data heals without waiting for
+  the next full scan.
+* **drain** -- the queue drains as *cross-cluster sub-batches*: up to
+  ``sub_batch`` chunks spanning any number of clusters are re-censused,
+  bulk-read, then pushed through the ``CodingEngine`` seam as **one**
+  decode batch plus **one** encode batch (``engine.recode_blobs``), so a
+  sub-batch costs O(length buckets) kernel launches, never O(chunks).
+  Per-chunk failures land in the :class:`RepairReport` instead of
+  aborting the pass -- a storm survivor always gets a full accounting of
+  what was rebuilt, what was already whole, and what is (still) lost.
+
+``SEARSStore.repair_cluster`` is a thin single-cluster wrapper;
+``BatchScheduler`` drains the queue as a bounded background lane between
+user flush windows so repair traffic never starves foreground puts/gets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairItem:
+    """One queued chunk copy, with the survivorship seen at enqueue time.
+
+    The priority snapshot may go stale while the item waits (more
+    failures, revives, deletes); the drain step re-censuses every
+    sub-batch, so staleness only ever affects *ordering*, never safety.
+    """
+
+    chunk_id: bytes
+    cluster_id: int
+    length: int  # original chunk bytes (decode target)
+    n_survivors: int  # alive piece holders at enqueue time
+
+    @property
+    def key(self) -> tuple[bytes, int]:
+        return (self.chunk_id, self.cluster_id)
+
+    @property
+    def priority(self) -> tuple[int, int, bytes]:
+        """Fewest surviving pieces first; deterministic tie-break."""
+        return (self.n_survivors, self.cluster_id, self.chunk_id)
+
+
+@dataclasses.dataclass
+class RepairReport:
+    """Per-chunk outcome accounting for one repair pass.
+
+    Chunk copies are identified as (chunk_id, cluster_id) and land in
+    exactly one bucket: ``rebuilt`` (>= 1 piece landed; partial write
+    misses stay visible in ``errors``), ``skipped_healthy``,
+    ``unrecoverable`` (< k survivors), or ``failed`` (decodable but every
+    rebuild write failed -- still degraded, retried by a later scan or
+    hint).  Every missing piece observed by the pass is accounted for:
+    ``pieces_missing == pieces_rebuilt + pieces_failed +
+    pieces_unrecoverable``.
+    """
+
+    rebuilt: list[tuple[bytes, int]] = dataclasses.field(default_factory=list)
+    skipped_healthy: list[tuple[bytes, int]] = dataclasses.field(
+        default_factory=list)
+    unrecoverable: list[tuple[bytes, int]] = dataclasses.field(
+        default_factory=list)
+    failed: list[tuple[bytes, int]] = dataclasses.field(
+        default_factory=list)  # decodable but every rebuild write failed
+    errors: list[tuple[bytes, int, str]] = dataclasses.field(
+        default_factory=list)  # per-piece write failures (chunk, cluster, err)
+    pieces_rebuilt: int = 0
+    pieces_missing: int = 0  # missing alive-node pieces seen by the pass
+    pieces_failed: int = 0  # rebuild computed but the write failed
+    pieces_unrecoverable: int = 0  # missing pieces of < k-survivor chunks
+    n_scanned: int = 0  # chunk copies censused by scans feeding this pass
+    n_sub_batches: int = 0  # engine recode batches issued
+
+    @property
+    def n_chunks(self) -> int:
+        """Chunk copies this pass classified (drain outcomes + scan skips)."""
+        return (len(self.rebuilt) + len(self.skipped_healthy)
+                + len(self.unrecoverable) + len(self.failed))
+
+    @property
+    def balanced(self) -> bool:
+        """Does the piece ledger account for every missing piece?"""
+        return self.pieces_missing == (self.pieces_rebuilt
+                                       + self.pieces_failed
+                                       + self.pieces_unrecoverable)
+
+    def merge(self, other: "RepairReport") -> "RepairReport":
+        self.rebuilt += other.rebuilt
+        self.skipped_healthy += other.skipped_healthy
+        self.unrecoverable += other.unrecoverable
+        self.failed += other.failed
+        self.errors += other.errors
+        self.pieces_rebuilt += other.pieces_rebuilt
+        self.pieces_missing += other.pieces_missing
+        self.pieces_failed += other.pieces_failed
+        self.pieces_unrecoverable += other.pieces_unrecoverable
+        self.n_scanned += other.n_scanned
+        self.n_sub_batches += other.n_sub_batches
+        return self
+
+
+class RepairManager:
+    """Prioritized cross-cluster rebuild through the batched data plane.
+
+    Holds a persistent repair queue fed by full scans
+    (:meth:`scan`) and read-repair hints (:meth:`hint`), drained in
+    most-at-risk-first order as length-bucketed engine sub-batches
+    (:meth:`drain`).  :meth:`repair` is the scan-then-drain full pass.
+    """
+
+    SUB_BATCH = 256  # chunks recoded per engine sub-batch window
+
+    def __init__(self, store, sub_batch: int | None = None) -> None:
+        self.store = store
+        self.sub_batch = sub_batch or self.SUB_BATCH
+        self._pending: dict[tuple[bytes, int], RepairItem] = {}
+
+    # ------------------------------------------------------------ queue ---
+    @property
+    def pending(self) -> int:
+        """Chunk copies currently queued for repair."""
+        return len(self._pending)
+
+    def hint(self, chunk_id: bytes, cluster_id: int) -> bool:
+        """Read-repair hint: a degraded read touched this chunk copy.
+
+        Censuses just that chunk and enqueues it when pieces are missing
+        on alive nodes (or fewer than k survive -- so the next pass
+        *reports* the loss).  A hint for a whole chunk -- e.g. a read that
+        went non-systematic only because a holder node is down -- is
+        dropped.  Returns True when the chunk was queued.
+        """
+        key = (chunk_id, cluster_id)
+        if key in self._pending:
+            return True
+        info = self.store.index.get(chunk_id, cluster_id)
+        if info is None:
+            return False  # deleted since the read was planned
+        health = self.store.clusters[cluster_id].piece_census(
+            [chunk_id])[chunk_id]
+        if health.whole and health.recoverable(self.store.k):
+            return False
+        self._pending[key] = RepairItem(
+            chunk_id=chunk_id, cluster_id=cluster_id, length=info.length,
+            n_survivors=len(health.holders))
+        return True
+
+    def scan(self, cluster_ids: list[int] | None = None) -> RepairReport:
+        """Census every chunk copy of the given (default: all) clusters.
+
+        Whole chunks land in the returned report's ``skipped_healthy``
+        without touching the queue; degraded and currently-unrecoverable
+        chunks are (re-)queued with fresh priorities.  No data-plane work
+        happens here -- the scan is pure metadata plus per-node health
+        bitmaps.
+        """
+        report = RepairReport()
+        if cluster_ids is None:
+            cluster_ids = [c.cluster_id for c in self.store.clusters]
+        for cluster_id in cluster_ids:
+            cids = sorted(self.store.index.cluster_chunks(cluster_id))
+            if not cids:
+                continue
+            census = self.store.clusters[cluster_id].piece_census(cids)
+            report.n_scanned += len(cids)
+            for cid in cids:
+                health = census[cid]
+                if health.whole and health.recoverable(self.store.k):
+                    # drop any stale queue entry (e.g. a read-repair hint
+                    # whose empty replacement died again) so the copy is
+                    # reported in exactly one bucket, not re-drained
+                    self._pending.pop((cid, cluster_id), None)
+                    report.skipped_healthy.append((cid, cluster_id))
+                    continue
+                info = self.store.index.get(cid, cluster_id)
+                self._pending[(cid, cluster_id)] = RepairItem(
+                    chunk_id=cid, cluster_id=cluster_id, length=info.length,
+                    n_survivors=len(health.holders))
+        return report
+
+    # ------------------------------------------------------------ drain ---
+    def drain(self, max_chunks: int | None = None,
+              cluster_ids: list[int] | None = None) -> RepairReport:
+        """Rebuild up to ``max_chunks`` queued chunks, most at risk first.
+
+        ``cluster_ids`` restricts the drain to items of those clusters
+        (the single-cluster ``repair_cluster`` contract); the default
+        drains the whole queue.  The selected items are sliced into
+        cross-cluster sub-batches of at most ``sub_batch`` chunks; each
+        sub-batch is re-censused (the queue snapshot may be stale),
+        bulk-read per cluster, then recoded through the engine as one
+        decode + one encode batch.  Chunks that turn out whole are
+        skipped; chunks below k survivors are recorded unrecoverable (and
+        dropped from the queue -- a later revive must re-hint or re-scan
+        them); per-piece write failures are recorded without aborting the
+        pass.
+        """
+        pool = list(self._pending.values())
+        if cluster_ids is not None:
+            scope = set(cluster_ids)
+            pool = [it for it in pool if it.cluster_id in scope]
+        if max_chunks is not None and max_chunks < len(pool):
+            # bounded lane: pick the top of the queue without paying a
+            # full O(P log P) sort per flush on a storm-sized backlog
+            items = heapq.nsmallest(max_chunks, pool,
+                                    key=lambda it: it.priority)
+        else:
+            items = sorted(pool, key=lambda it: it.priority)
+        report = RepairReport()
+        for start in range(0, len(items), self.sub_batch):
+            self._repair_sub_batch(items[start:start + self.sub_batch],
+                                   report)
+        return report
+
+    def repair(self, cluster_ids: list[int] | None = None,
+               max_chunks: int | None = None) -> RepairReport:
+        """Scan the given clusters, then drain their queued chunks.
+
+        With ``cluster_ids=None`` this is the storm-recovery full pass:
+        the drain also covers previously queued hints/items, so one
+        ``repair()`` call settles every known degraded chunk copy
+        system-wide.  With explicit clusters the pass stays scoped --
+        other clusters' queued hints are left for their own pass (or the
+        scheduler's background lane).
+        """
+        report = self.scan(cluster_ids)
+        return report.merge(self.drain(max_chunks=max_chunks,
+                                       cluster_ids=cluster_ids))
+
+    # ----------------------------------------------------------- helpers --
+    def _repair_sub_batch(self, items: list[RepairItem],
+                          report: RepairReport) -> None:
+        """One cross-cluster sub-batch: census, bulk read, recode, write."""
+        store = self.store
+        by_cluster: dict[int, list[RepairItem]] = {}
+        for it in items:
+            self._pending.pop(it.key, None)
+            by_cluster.setdefault(it.cluster_id, []).append(it)
+
+        # fresh census + classification (the queued priority may be stale)
+        live: list[RepairItem] = []
+        targets: dict[tuple[bytes, int], tuple[int, ...]] = {}
+        for cluster_id, its in sorted(by_cluster.items()):
+            cluster = store.clusters[cluster_id]
+            census = cluster.piece_census([it.chunk_id for it in its])
+            for it in its:
+                if store.index.get(it.chunk_id, cluster_id) is None:
+                    continue  # deleted while queued: nothing to account
+                health = census[it.chunk_id]
+                report.pieces_missing += len(health.missing)
+                if not health.recoverable(store.k):
+                    # < k survivors: nothing can be decoded right now --
+                    # also covers a "whole" chunk whose only alive nodes
+                    # are its too-few holders (no rebuild targets exist)
+                    report.unrecoverable.append(it.key)
+                    report.pieces_unrecoverable += len(health.missing)
+                elif health.whole:
+                    report.skipped_healthy.append(it.key)
+                else:
+                    live.append(it)
+                    targets[it.key] = health.missing
+
+        if not live:
+            return
+
+        # bulk piece reads per cluster, then ONE decode + ONE encode batch
+        # through the engine seam for the whole cross-cluster sub-batch
+        pieces: dict[tuple[bytes, int], dict[int, bytes]] = {}
+        for cluster_id, its in sorted(by_cluster.items()):
+            want = [it.chunk_id for it in its if it.key in targets]
+            if want:
+                got = store.clusters[cluster_id].read_pieces_batch(
+                    want, store.k)
+                for cid in want:
+                    pieces[(cid, cluster_id)] = got[cid]
+        jobs = [(pieces[it.key], it.length) for it in live]
+        _, all_pieces = store.engine.recode_blobs(store.code, jobs)
+        report.n_sub_batches += 1
+
+        for it, chunk_pieces in zip(live, all_pieces):
+            cluster = store.clusters[it.cluster_id]
+            wrote = failures = 0
+            for node_id in targets[it.key]:
+                node = cluster.nodes[node_id]
+                if not node.alive or node.has(it.chunk_id, node_id):
+                    # state moved under us (node died / piece appeared):
+                    # the slot is no longer an alive-missing piece
+                    report.pieces_missing -= 1
+                    continue
+                try:
+                    node.put(it.chunk_id, node_id, chunk_pieces[node_id])
+                    wrote += 1
+                except Exception as exc:  # capacity, node death, conflict
+                    report.errors.append((it.chunk_id, it.cluster_id,
+                                          str(exc)))
+                    report.pieces_failed += 1
+                    failures += 1
+            report.pieces_rebuilt += wrote
+            if wrote:
+                report.rebuilt.append(it.key)  # errors hold partial misses
+            elif failures:
+                # decodable, but no piece landed: the chunk is still
+                # degraded -- report it as failed, never as healthy (a
+                # later scan or hint retries it)
+                report.failed.append(it.key)
+            else:
+                # every target healed (or vanished) between census and
+                # write -- the chunk is whole, not rebuilt by us
+                report.skipped_healthy.append(it.key)

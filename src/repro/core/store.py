@@ -46,6 +46,7 @@ from repro.core.engine import CodingEngine, make_engine
 from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
 from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
                                  UploadPlan)
+from repro.core.repair import RepairManager, RepairReport
 from repro.core.rs_code import RSCode
 
 
@@ -108,6 +109,7 @@ class SEARSStore:
         self.rng = np.random.default_rng(seed)
         self.hash_fn = hash_fn
         self.engine = make_engine(engine, hash_fn)
+        self.repair = RepairManager(self, sub_batch=self.REPAIR_BATCH)
         self.logical_bytes = 0
         self.n_files = 0
 
@@ -479,6 +481,16 @@ class SEARSStore:
                 req.status, req.error = "failed", exc
             return
 
+        # read-repair: a non-systematic piece set means a node in the
+        # systematic prefix was dead or had lost its piece -- hint the
+        # repair queue so hot degraded chunks heal without waiting for a
+        # full scan (the hint censuses the chunk and drops false alarms,
+        # e.g. a holder that is merely down with its piece intact)
+        systematic = set(range(self.k))
+        for t in all_tasks:
+            if t.pieces is not None and set(t.pieces) != systematic:
+                self.repair.hint(t.chunk_id, t.cluster_id)
+
         # demux data loss to its request before the shared decode so one
         # unrecoverable chunk cannot poison the whole window
         for req in live:
@@ -599,32 +611,19 @@ class SEARSStore:
     def repair_cluster(self, cluster_id: int) -> int:
         """Re-create missing pieces on revived/replacement nodes.
 
-        Returns the number of pieces rebuilt.  Requires >= k alive nodes.
-        Decode and re-encode run as engine batches of at most
-        ``REPAIR_BATCH`` chunks, bounding transient memory while still
-        amortizing kernel launches within each sub-batch.
+        Thin single-cluster wrapper over :class:`RepairManager`: scans the
+        cluster, skips whole chunks, rebuilds the rest most-at-risk first
+        in cross-cluster engine sub-batches, and records unrecoverable
+        chunks in the report instead of aborting the pass.  Returns the
+        number of pieces rebuilt; use ``repair_all`` (or
+        ``store.repair.repair(...)`` directly) for the full
+        :class:`RepairReport`.
         """
-        cluster = self.clusters[cluster_id]
-        all_cids = list(self.index.cluster_chunks(cluster_id))
-        rebuilt = 0
-        for start in range(0, len(all_cids), self.REPAIR_BATCH):
-            cids = all_cids[start:start + self.REPAIR_BATCH]
-            jobs: list[tuple[dict[int, bytes], int]] = []
-            for cid in cids:
-                info = self.index.get(cid, cluster_id)
-                pieces = cluster.read_pieces(cid, self.k)
-                if len(pieces) < self.k:
-                    raise RuntimeError(
-                        f"chunk {cid.hex()} unrecoverable: {len(pieces)} < k")
-                jobs.append((pieces, info.length))
-            blobs = self.engine.decode_blobs(self.code, jobs)
-            all_pieces = self.engine.encode_blobs(self.code, blobs)
-            for cid, pieces in zip(cids, all_pieces):
-                for node in cluster.nodes:
-                    if node.alive and not node.has(cid, node.node_id):
-                        node.put(cid, node.node_id, pieces[node.node_id])
-                        rebuilt += 1
-        return rebuilt
+        return self.repair.repair(cluster_ids=[cluster_id]).pieces_rebuilt
+
+    def repair_all(self) -> RepairReport:
+        """Storm recovery: prioritized repair pass over every cluster."""
+        return self.repair.repair()
 
     # ------------------------------------------------------------------
     def stats(self) -> StoreStats:

@@ -220,6 +220,151 @@ def multi_user_get_trace(put_trace: list[tuple[str, list[tuple[str, bytes]]]]
     return [(user, [fn for fn, _ in files]) for user, files in put_trace]
 
 
+@dataclasses.dataclass(frozen=True)
+class StormConfig:
+    """Shape of a seeded failure storm over an (n, k) multi-cluster store.
+
+    Each step is one storm wave: simultaneous node kills across
+    ``storm_clusters`` clusters, then probabilistic revives (node back up
+    with its pieces intact) or replacements (factory-fresh node: alive but
+    empty -- its pieces must be rebuilt), then -- when
+    ``repair_every_step`` -- a repair pass.
+
+    With ``allow_data_loss=False`` the generator caps each cluster's
+    *lost pieces* (dead nodes plus not-yet-repaired replacements) at
+    ``n - k``, so every chunk keeps >= k surviving pieces at every moment
+    of the trace and the whole store stays provably recoverable.  With
+    ``allow_data_loss=True`` the caps come off and storms may push chunks
+    past the code's tolerance -- the harness for exercising the
+    ``RepairReport.unrecoverable`` path.
+    """
+
+    n_clusters: int = 4
+    n: int = 10
+    k: int = 5
+    n_steps: int = 4
+    storm_clusters: int = 2  # clusters hit per storm wave
+    kills_per_storm: int = 2  # node kills per hit cluster (capped when safe)
+    revive_prob: float = 0.6  # per-cluster chance of a revive wave per step
+    replace_fraction: float = 0.5  # revived nodes that come back wiped
+    repair_every_step: bool = True
+    allow_data_loss: bool = False
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StormEvent:
+    """One step of a failure-storm trace.
+
+    ``kind`` is ``kill`` (nodes go down, pieces intact), ``revive``
+    (nodes return with pieces intact), ``replace`` (nodes return
+    factory-fresh and empty), or ``repair`` (run a full prioritized
+    repair pass).  Kill events sharing a ``step`` are one storm wave.
+    """
+
+    step: int
+    kind: str  # kill | revive | replace | repair
+    cluster_id: int = -1
+    node_ids: tuple[int, ...] = ()
+
+
+def failure_storm_trace(cfg: StormConfig) -> list[StormEvent]:
+    """Deterministic kill/revive/replace/repair schedule for ``cfg.seed``.
+
+    Tracks each cluster's *lost* set (dead nodes plus unrepaired
+    replacements); in safe mode kills are capped so ``len(lost) <= n-k``
+    always holds, which guarantees >= k surviving pieces per chunk
+    throughout the trace.  A ``repair`` event rebuilds replacement nodes'
+    pieces, emptying the wiped set.
+    """
+    if not cfg.allow_data_loss and cfg.n - cfg.k < 1:
+        raise ValueError("safe storms need n > k (some loss tolerance)")
+    rng = np.random.default_rng(cfg.seed)
+    # per-cluster node state; a node's *pieces* are lost while it is in
+    # any of these sets except plain `dead` revivals (kills keep pieces):
+    dead: dict[int, set[int]] = {c: set() for c in range(cfg.n_clusters)}
+    wiped: dict[int, set[int]] = {c: set() for c in range(cfg.n_clusters)}
+    # down AND empty: a replacement that was killed before any repair
+    # rebuilt it -- reviving it brings back an empty node, not pieces
+    dead_wiped: dict[int, set[int]] = {c: set()
+                                       for c in range(cfg.n_clusters)}
+    events: list[StormEvent] = []
+    for step in range(cfg.n_steps):
+        # -- storm wave: simultaneous kills across several clusters ------
+        hit = rng.choice(cfg.n_clusters,
+                         size=min(cfg.storm_clusters, cfg.n_clusters),
+                         replace=False)
+        for c in sorted(int(c) for c in hit):
+            down = dead[c] | dead_wiped[c]
+            alive = sorted(set(range(cfg.n)) - down)
+            cap = len(alive)
+            if not cfg.allow_data_loss:
+                cap = (cfg.n - cfg.k) - len(down | wiped[c])
+            n_kill = min(cfg.kills_per_storm, cap, len(alive))
+            if n_kill <= 0:
+                continue
+            ids = {int(i) for i in rng.choice(alive, size=n_kill,
+                                              replace=False)}
+            dead[c] |= ids - wiped[c]
+            dead_wiped[c] |= ids & wiped[c]  # killed replacement: empty
+            wiped[c] -= ids
+            events.append(StormEvent(step, "kill", c, tuple(sorted(ids))))
+        # -- recovery wave: some down nodes come back ---------------------
+        for c in range(cfg.n_clusters):
+            down = sorted(dead[c] | dead_wiped[c])
+            if not down or rng.random() >= cfg.revive_prob:
+                continue
+            n_back = int(rng.integers(1, len(down) + 1))
+            back = [int(i) for i in rng.choice(down, size=n_back,
+                                               replace=False)]
+            revived = [i for i in back
+                       if rng.random() >= cfg.replace_fraction]
+            replaced = [i for i in back if i not in revived]
+            if revived:
+                # a revived ex-replacement comes back *empty* (its pieces
+                # were already gone) -- it stays in the lost set as wiped
+                wiped[c] |= set(revived) & dead_wiped[c]
+                dead[c] -= set(revived)
+                dead_wiped[c] -= set(revived)
+                events.append(StormEvent(step, "revive", c,
+                                         tuple(sorted(revived))))
+            if replaced:  # alive but empty: still lost until repaired
+                dead[c] -= set(replaced)
+                dead_wiped[c] -= set(replaced)
+                wiped[c] |= set(replaced)
+                events.append(StormEvent(step, "replace", c,
+                                         tuple(sorted(replaced))))
+        # -- repair pass: rebuilds pieces on alive nodes ------------------
+        if cfg.repair_every_step:
+            events.append(StormEvent(step, "repair"))
+            for c in range(cfg.n_clusters):
+                wiped[c].clear()  # replacements healed (>= k survivors)
+    return events
+
+
+def apply_storm(store, events: list[StormEvent]) -> list:
+    """Replay a failure-storm trace against a live store.
+
+    ``kill``/``revive``/``replace`` mutate the cluster nodes; each
+    ``repair`` event runs a full prioritized ``store.repair.repair()``
+    pass.  Returns the ``RepairReport`` of every repair event in trace
+    order.
+    """
+    reports = []
+    for ev in events:
+        if ev.kind == "kill":
+            store.clusters[ev.cluster_id].kill_nodes(list(ev.node_ids))
+        elif ev.kind == "revive":
+            store.clusters[ev.cluster_id].revive_nodes(list(ev.node_ids))
+        elif ev.kind == "replace":
+            store.clusters[ev.cluster_id].replace_nodes(list(ev.node_ids))
+        elif ev.kind == "repair":
+            reports.append(store.repair.repair())
+        else:
+            raise ValueError(f"unknown storm event kind {ev.kind!r}")
+    return reports
+
+
 def request_trace(cfg: WorkloadConfig, events: list[FileEvent],
                   requests_per_user_day: int = 6) -> list[tuple[int, int, str, str]]:
     """Replayable retrieval trace: (day, hour, user, filename).
