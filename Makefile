@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow test-fast test-launches bench bench-pipeline \
-	bench-smoke bench-repair headline
+	bench-smoke bench-repair bench-classes headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -15,15 +15,18 @@ test-slow:
 
 # dispatch-regression lane (also a CI job): a put window must stay
 # O(1) gear + O(1) SHA-1 + O(buckets) GF launches with no gear retraces,
-# and a storm repair pass must stay O(buckets) per sub-batch, not O(chunks)
+# a storm repair pass must stay O(buckets) per sub-batch, not O(chunks),
+# and a mixed-storage-class window must stay O(code buckets x length
+# buckets), never O(files)
 test-launches:
-	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py
+	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py \
+		tests/test_classes.py
 
 # skip the slow model/kernel suites; storage core only
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
 		tests/test_scheduler.py tests/test_ingest.py \
-		tests/test_repair.py \
+		tests/test_repair.py tests/test_classes.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py
 
@@ -36,15 +39,20 @@ bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
 
 # quick CI smoke: data-plane pipeline + cross-user scheduler + storm
-# repair benchmarks (BENCH_pipeline.json + BENCH_scheduler.json +
-# BENCH_repair.json)
+# repair + storage-class benchmarks (BENCH_pipeline.json +
+# BENCH_scheduler.json + BENCH_repair.json + BENCH_classes.json)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench,class_bench
 
 # failure-storm repair: per-chunk vs batched cross-cluster rebuild on
 # both engines (BENCH_repair.json)
 bench-repair:
 	$(PYTHON) -m benchmarks.run --only repair_bench
+
+# storage classes: realtime-vs-archival retrieval/overhead trade-off and
+# mixed-window launch economics on both engines (BENCH_classes.json)
+bench-classes:
+	$(PYTHON) -m benchmarks.run --only class_bench
 
 # headline 3 MB retrieval claim; ENGINE=numpy|kernel
 ENGINE ?= numpy

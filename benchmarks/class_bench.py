@@ -1,0 +1,183 @@
+"""Storage classes: per-class retrieval/overhead + mixed-window launches.
+
+The paper's "flexible mixing of different configurations" claim, measured
+on both engines:
+
+* **per-class trade-off** -- one store with a real-time pool (ULB,
+  (10,5): few pieces on the retrieval critical path) and an archival
+  pool (CLB, (14,10): 1.4x redundancy instead of 2x).  We ingest a mixed
+  trace and report each class's modeled retrieval time and physical
+  storage overhead (``StoreStats.per_class``) -- retrieval should favor
+  real-time, overhead should favor archival.
+* **mixed-window launch economics** -- a scheduler flush window carrying
+  both classes must issue O(code buckets x length buckets) GF/SHA-1
+  launches and O(chunker configs) gear launches, never O(files): we
+  record the launch counts for a window of N files per class and one of
+  2N and require them identical, while asserting the coalesced mixed
+  window stays byte-identical to sequential per-user, per-class calls.
+
+Results land in ``BENCH_classes.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import calibrated_params
+from repro.core.classes import StorageClass
+from repro.core.store import SEARSStore
+from repro.core.workload import MixedClassConfig, mixed_class_trace
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_classes.json")
+
+
+def _fresh_store(engine: str) -> SEARSStore:
+    return SEARSStore(classes=[StorageClass.realtime(),
+                               StorageClass.archival()],
+                      num_clusters=8, node_capacity=1 << 30,
+                      latency=calibrated_params(), engine=engine)
+
+
+def _launches():
+    from repro.kernels import ops
+    return ops.LAUNCHES
+
+
+def _ingest_sequential(store, trace):
+    for user, files, cls in trace:
+        store.put_files(user, files, storage_class=cls)
+
+
+def _retrieval_times(store, trace) -> dict[str, list[float]]:
+    times: dict[str, list[float]] = {}
+    for user, files, cls in trace:
+        for _, st in store.get_files(user, [fn for fn, _ in files]):
+            times.setdefault(cls, []).append(st.time_s)
+    return times
+
+
+def _window_requests(files_per_class: int
+                     ) -> list[tuple[str, list[tuple[str, bytes]], str]]:
+    """The (user, files, class) requests of one mixed window.
+
+    Shared by the coalesced and the sequential-baseline paths so the
+    ``identical_artifacts`` comparison is over one trace by construction.
+    """
+    def blob(seed):
+        return np.random.default_rng(seed).integers(
+            0, 256, 48 << 10, dtype=np.int64).astype(np.uint8).tobytes()
+
+    reqs = []
+    for i in range(files_per_class):
+        reqs.append((f"u{i}", [(f"rt/{i}", blob(i))], "realtime"))
+        reqs.append((f"v{i}", [(f"ar/{i}", blob(1000 + i))], "archival"))
+    return reqs
+
+
+def _mixed_window(engine: str, files_per_class: int):
+    """One coalesced flush carrying both classes; returns launch delta."""
+    store = _fresh_store(engine)
+    sched = store.scheduler()
+    for user, files, cls in _window_requests(files_per_class):
+        sched.submit_put(user, files, storage_class=cls)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    reqs = sched.flush()
+    dt = time.perf_counter() - t0
+    assert all(r.ok for r in reqs), [r.error for r in reqs]
+    return store, _launches().delta(before), dt
+
+
+def run(quick: bool = True) -> list[dict]:
+    cfg = MixedClassConfig(n_users=3 if quick else 6,
+                           hot_files_per_user=3 if quick else 6,
+                           cold_files_per_user=2 if quick else 4)
+    trace = mixed_class_trace(cfg)
+    rows = []
+    for engine in ("numpy", "kernel"):
+        # per-class retrieval time + storage overhead on a mixed ingest
+        store = _fresh_store(engine)
+        if engine == "kernel":
+            _ingest_sequential(_fresh_store(engine), trace)  # jit warmup
+        _ingest_sequential(store, trace)
+        times = _retrieval_times(store, trace)
+        per_class = {}
+        for name, cs in store.stats().per_class.items():
+            per_class[name] = {
+                "n": cs.n, "k": cs.k,
+                "redundancy_overhead": cs.redundancy_overhead,
+                "physical_overhead": round(
+                    cs.piece_bytes / max(1, cs.logical_bytes), 4),
+                "dedup_ratio": round(cs.dedup_ratio, 4),
+                "mean_retrieval_s": round(
+                    float(np.mean(times[name])), 4),
+            }
+
+        # mixed-window launch scaling: N vs 2N files per class
+        n_small = 3 if quick else 6
+        _, small, _ = _mixed_window(engine, n_small)
+        s_big, big, flush_s = _mixed_window(engine, 2 * n_small)
+
+        # equivalence: the coalesced mixed window == sequential calls
+        # over the exact same request trace
+        seq = _fresh_store(engine)
+        for user, files, cls in _window_requests(2 * n_small):
+            seq.put_files(user, files, storage_class=cls)
+        identical = seq.stats() == s_big.stats() and all(
+            na._pieces == nb._pieces
+            for ca, cb in zip(seq.clusters, s_big.clusters)
+            for na, nb in zip(ca.nodes, cb.nodes))
+
+        rows.append({
+            "name": f"classes/{engine}",
+            "engine": engine,
+            "per_class": per_class,
+            "mixed_window": {
+                "files_per_class_small": n_small,
+                "files_per_class_big": 2 * n_small,
+                "launches_small": {"gf": small.gf, "sha1": small.sha1,
+                                   "gear": small.gear},
+                "launches_big": {"gf": big.gf, "sha1": big.sha1,
+                                 "gear": big.gear},
+                "launches_scale_with_files": small.total != big.total,
+                "flush_s": round(flush_s, 4),
+            },
+            "identical_artifacts": identical,
+        })
+    with open(_OUT, "w") as f:
+        json.dump({"results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        pc = r["per_class"]
+        rt, ar = pc["realtime"], pc["archival"]
+        if not ar["physical_overhead"] < rt["physical_overhead"]:
+            fails.append(f"{r['name']}: archival overhead "
+                         f"{ar['physical_overhead']} not below realtime "
+                         f"{rt['physical_overhead']}")
+        if not rt["mean_retrieval_s"] < ar["mean_retrieval_s"]:
+            fails.append(f"{r['name']}: realtime retrieval "
+                         f"{rt['mean_retrieval_s']}s not below archival "
+                         f"{ar['mean_retrieval_s']}s")
+        mw = r["mixed_window"]
+        if mw["launches_scale_with_files"]:
+            fails.append(f"{r['name']}: mixed-window launches scale with "
+                         f"files ({mw['launches_small']} -> "
+                         f"{mw['launches_big']})")
+        if not r["identical_artifacts"]:
+            fails.append(f"{r['name']}: coalesced mixed window diverged "
+                         "from sequential per-class calls")
+    return fails
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -6,6 +6,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.classes import StorageClass
 from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
 from repro.core.store import SEARSStore
@@ -32,8 +33,9 @@ def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
         return RADMADStore(n=n, k=k, num_clusters=clusters,
                            node_capacity=node_capacity,
                            container_size=512 << 10, latency=lat, seed=seed)
-    return SEARSStore(n=n, k=k, num_clusters=clusters,
-                      node_capacity=node_capacity, binding=scheme,
+    cls = StorageClass(name="default", n=n, k=k, binding=scheme)
+    return SEARSStore(classes=[cls], num_clusters=clusters,
+                      node_capacity=node_capacity,
                       latency=lat, seed=seed, engine=engine)
 
 

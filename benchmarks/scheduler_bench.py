@@ -89,7 +89,7 @@ def _run_coalesced(puts, gets) -> dict:
     get_launches = _launches().delta(before)
     assert all(r.ok for r in get_reqs.values())
     return {"store": store, "sched": sched,
-            "results": {u: r.result for u, r in get_reqs.items()},
+            "results": {u: r.result() for u, r in get_reqs.items()},
             "put_s": t_put, "get_s": t_get,
             "put_launches": put_launches, "get_launches": get_launches}
 

@@ -5,13 +5,15 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import numpy as np
 
+from repro.core.classes import StorageClass
 from repro.core.store import SEARSStore
 
 
 def main() -> None:
-    # a 4-cluster SEARS deployment, (n=10, k=5) coding, ULB binding
-    store = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=1 << 30,
-                       binding="ulb")
+    # a 4-cluster SEARS deployment: one (n=10, k=5) ULB storage class
+    store = SEARSStore(
+        classes=[StorageClass(name="default", n=10, k=5, binding="ulb")],
+        num_clusters=4, node_capacity=1 << 30)
 
     rng = np.random.default_rng(0)
     report = rng.integers(0, 256, size=300_000, dtype=np.int64).astype(

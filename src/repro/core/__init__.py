@@ -2,6 +2,7 @@
 
 from repro.core.binding import ChunkLevelBinding, UserLevelBinding, make_binding
 from repro.core.chunking import Chunker, DEFAULT_CHUNKER
+from repro.core.classes import StorageClass, partition_pools
 from repro.core.engine import (CodingEngine, KernelEngine, NumpyEngine,
                                make_engine)
 from repro.core.hashing import chunk_id, fast_chunk_id
@@ -9,14 +10,16 @@ from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
 from repro.core.repair import RepairManager, RepairReport
 from repro.core.rs_code import RSCode
-from repro.core.scheduler import BatchScheduler, Request, RequestQueue
+from repro.core.scheduler import (BatchScheduler, Request, RequestFuture,
+                                  RequestQueue)
 from repro.core.store import SEARSStore
 
 __all__ = [
     "ChunkLevelBinding", "UserLevelBinding", "make_binding",
     "Chunker", "DEFAULT_CHUNKER", "chunk_id", "fast_chunk_id",
+    "StorageClass", "partition_pools",
     "CodingEngine", "KernelEngine", "NumpyEngine", "make_engine",
     "LatencyParams", "calibrate", "RADMADStore", "RepairManager",
     "RepairReport", "RSCode", "SEARSStore",
-    "BatchScheduler", "Request", "RequestQueue",
+    "BatchScheduler", "Request", "RequestFuture", "RequestQueue",
 ]

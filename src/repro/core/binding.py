@@ -8,6 +8,11 @@
   it fills up the user rolls over to a fresh cluster and -- exactly as the
   paper specifies -- dedup scope shrinks to the *current* cluster only, so
   cross-cluster copies of the same chunk may exist.
+
+Schemes are instantiated per storage class and receive only that class's
+cluster *pool*, so all bookkeeping is keyed by ``cluster_id`` (stable
+across calls), never by position in the passed list -- a pool is an
+arbitrary subset of the store's clusters.
 """
 
 from __future__ import annotations
@@ -57,8 +62,10 @@ class UserLevelBinding(BindingScheme):
         self._next = 0
 
     def _assign(self, user: str, clusters: list[Cluster]) -> int:
-        # round-robin initial assignment spreads users evenly
-        cid = self._next % len(clusters)
+        # round-robin initial assignment spreads users evenly; bind by
+        # cluster_id so a class pool (a subset of the store's clusters)
+        # resolves the same cluster on every call
+        cid = clusters[self._next % len(clusters)].cluster_id
         self._next += 1
         self._bound[user] = cid
         return cid
@@ -67,7 +74,11 @@ class UserLevelBinding(BindingScheme):
         cid = self._bound.get(user)
         if cid is None:
             cid = self._assign(user, clusters)
-        return clusters[cid]
+        for c in clusters:
+            if c.cluster_id == cid:
+                return c
+        raise KeyError(f"user {user!r} bound to cluster {cid}, "
+                       f"not in this pool")
 
     def choose_cluster(self, user, chunk_id, need_bytes, clusters):
         cluster = self.current_cluster(user, clusters)

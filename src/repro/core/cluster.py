@@ -7,7 +7,11 @@ killed / revived / marked slow for fault-tolerance and straggler tests.
 ``Cluster`` groups n nodes; exactly one code piece of every chunk bound to
 the cluster lives on each node.  Any node can act as the *coding node* for
 a chunk (we pick one deterministically from the chunk id, which also
-balances coding load).
+balances coding load).  Each cluster carries its *own* ``(n, k)`` erasure
+code -- a heterogeneous store mixes pools of differently configured
+clusters (storage classes), so retrieval, deletion and repair must
+resolve the code from the owning cluster, never from a store-wide
+global.
 
 ``SwitchingNode`` is the per-user entry point: it owns the user's
 chunk-meta-data-table and answers "which of these chunk ids are missing"
@@ -20,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import dedup
+from repro.core.rs_code import RSCode
 
 
 class CapacityError(RuntimeError):
@@ -109,13 +114,22 @@ class ChunkHealth:
 
 
 class Cluster:
-    """n storage nodes holding one code piece each per bound chunk."""
+    """n storage nodes holding one code piece each per bound chunk.
 
-    def __init__(self, cluster_id: int, n: int, node_capacity: int) -> None:
+    ``k`` (default ``n // 2``, the seed store's shape) fixes the cluster's
+    own ``(n, k)`` erasure code; ``code`` is the codec every consumer --
+    retrieval, repair, local-cache rebuilds -- must use for chunks bound
+    here.
+    """
+
+    def __init__(self, cluster_id: int, n: int, node_capacity: int,
+                 k: int | None = None) -> None:
         self.cluster_id = cluster_id
         self.nodes = [StorageNode(node_id=i, capacity=node_capacity)
                       for i in range(n)]
         self.n = n
+        self.k = max(1, n // 2) if k is None else k
+        self.code = RSCode(self.n, self.k)  # validates k <= n
         self._reserved = 0  # bytes promised to planned-but-unwritten chunks
 
     def reserve(self, nbytes: int) -> None:

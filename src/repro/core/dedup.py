@@ -40,11 +40,18 @@ class ChunkInfo:
 
 @dataclasses.dataclass
 class FileMeta:
-    """File chunk-meta-data: ordered (chunk_id, cluster_id) entries."""
+    """File chunk-meta-data: ordered (chunk_id, cluster_id) entries.
+
+    ``storage_class`` names the :class:`repro.core.classes.StorageClass`
+    the file was uploaded under, so retrieval, deletion and repair can
+    resolve per-class policy (the code itself always comes from the
+    owning cluster of each entry).
+    """
 
     timestamp: float
     entries: list[tuple[bytes, int]]
     lengths: list[int]
+    storage_class: str = "default"
 
     @property
     def size(self) -> int:

@@ -74,6 +74,61 @@ class CodingEngine(abc.ABC):
         blobs = self.decode_blobs(code, jobs)
         return blobs, self.encode_blobs(code, blobs)
 
+    # -- heterogeneous batches: one window, many storage-class policies ----
+    # A mixed-class flush window carries work under several (n, k) codes
+    # and several chunker configs at once.  The *_multi entry points keep
+    # the window's launch economics: they group by policy and issue one
+    # batched call per group, so a window costs O(code buckets x length
+    # buckets) GF launches and O(chunker configs) gear launches -- never
+    # O(files) or O(chunks).  Results come back in input order.
+
+    def _by_policy(self, jobs: list[tuple], batch_fn) -> list:
+        """Group (policy, *job) tuples by policy, run one batched call per
+        group, and scatter results back into input order.  ``batch_fn``
+        receives the policy and that group's job payloads (the tuple
+        remainders, unwrapped when they are single values)."""
+        groups: dict = {}
+        for i, job in enumerate(jobs):
+            groups.setdefault(job[0], []).append(i)
+        out: list = [None] * len(jobs)
+        for policy, idxs in groups.items():
+            payload = [jobs[i][1] if len(jobs[i]) == 2 else jobs[i][1:]
+                       for i in idxs]
+            for i, res in zip(idxs, batch_fn(policy, payload)):
+                out[i] = res
+        return out
+
+    def chunk_blobs_multi(self, jobs: list[tuple[Chunker, bytes]]
+                          ) -> list[list[tuple[int, int]]]:
+        """CDC spans for (chunker, blob) jobs: one gear pass per chunker."""
+        return self._by_policy(jobs, self.chunk_blobs)
+
+    def encode_blobs_multi(self, jobs: list[tuple[RSCode, bytes]]
+                           ) -> list[list[bytes]]:
+        """RS-encode (code, blob) jobs: one encode batch per distinct code."""
+        return self._by_policy(jobs, self.encode_blobs)
+
+    def decode_blobs_multi(self,
+                           jobs: list[tuple[RSCode, dict[int, bytes], int]]
+                           ) -> list[bytes]:
+        """Decode (code, piece_map, nbytes) jobs, one batch per code."""
+        return self._by_policy(jobs, self.decode_blobs)
+
+    def recode_blobs_multi(self,
+                           jobs: list[tuple[RSCode, dict[int, bytes], int]]
+                           ) -> tuple[list[bytes], list[list[bytes]]]:
+        """Repair recode of (code, piece_map, nbytes) jobs across codes.
+
+        One decode + one encode batch per distinct code, so a cross-class
+        repair sub-batch stays O(code buckets x length buckets) launches.
+        """
+        paired = self._by_policy(
+            jobs, lambda code, group: list(zip(*self.recode_blobs(
+                code, group))))
+        blobs = [b for b, _ in paired]
+        pieces = [p for _, p in paired]
+        return blobs, pieces
+
 
 class NumpyEngine(CodingEngine):
     """Per-chunk host path: hashlib + one numpy GF matmul per chunk."""

@@ -60,6 +60,7 @@ class UploadPlan:
     encode_tasks: list[EncodeTask]
     entries: list[tuple[bytes, int]] = dataclasses.field(default_factory=list)
     request_id: int = -1
+    storage_class: str = "default"  # class whose policy produced this plan
 
     @property
     def bytes_uploaded(self) -> int:

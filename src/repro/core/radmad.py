@@ -56,7 +56,7 @@ class RADMADStore:
         self.container_size = container_size
         self.stripe_unit = stripe_unit
         self.chunker = chunker
-        self.clusters = [Cluster(i, n, node_capacity)
+        self.clusters = [Cluster(i, n, node_capacity, k=k)
                          for i in range(num_clusters)]
         self.latency = latency or LatencyParams()
         self.rng = np.random.default_rng(seed)

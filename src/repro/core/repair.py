@@ -19,8 +19,11 @@ chunks must not cost any data-plane work at all.
 * **drain** -- the queue drains as *cross-cluster sub-batches*: up to
   ``sub_batch`` chunks spanning any number of clusters are re-censused,
   bulk-read, then pushed through the ``CodingEngine`` seam as **one**
-  decode batch plus **one** encode batch (``engine.recode_blobs``), so a
-  sub-batch costs O(length buckets) kernel launches, never O(chunks).
+  decode batch plus **one** encode batch per distinct cluster code
+  (``engine.recode_blobs_multi``), so a sub-batch costs O(code buckets x
+  length buckets) kernel launches, never O(chunks).  Every chunk rebuilds
+  with its *owning cluster's* ``(n, k)`` -- under storage classes the
+  store has no single global code.
   Per-chunk failures land in the :class:`RepairReport` instead of
   aborting the pass -- a storm survivor always gets a full accounting of
   what was rebuilt, what was already whole, and what is (still) lost.
@@ -155,9 +158,9 @@ class RepairManager:
         info = self.store.index.get(chunk_id, cluster_id)
         if info is None:
             return False  # deleted since the read was planned
-        health = self.store.clusters[cluster_id].piece_census(
-            [chunk_id])[chunk_id]
-        if health.whole and health.recoverable(self.store.k):
+        cluster = self.store.clusters[cluster_id]
+        health = cluster.piece_census([chunk_id])[chunk_id]
+        if health.whole and health.recoverable(cluster.k):
             return False
         self._pending[key] = RepairItem(
             chunk_id=chunk_id, cluster_id=cluster_id, length=info.length,
@@ -180,11 +183,12 @@ class RepairManager:
             cids = sorted(self.store.index.cluster_chunks(cluster_id))
             if not cids:
                 continue
-            census = self.store.clusters[cluster_id].piece_census(cids)
+            cluster = self.store.clusters[cluster_id]
+            census = cluster.piece_census(cids)
             report.n_scanned += len(cids)
             for cid in cids:
                 health = census[cid]
-                if health.whole and health.recoverable(self.store.k):
+                if health.whole and health.recoverable(cluster.k):
                     # drop any stale queue entry (e.g. a read-repair hint
                     # whose empty replacement died again) so the copy is
                     # reported in exactly one bucket, not re-drained
@@ -256,7 +260,8 @@ class RepairManager:
             self._pending.pop(it.key, None)
             by_cluster.setdefault(it.cluster_id, []).append(it)
 
-        # fresh census + classification (the queued priority may be stale)
+        # fresh census + classification (the queued priority may be stale;
+        # recoverability is judged by each cluster's *own* k)
         live: list[RepairItem] = []
         targets: dict[tuple[bytes, int], tuple[int, ...]] = {}
         for cluster_id, its in sorted(by_cluster.items()):
@@ -267,7 +272,7 @@ class RepairManager:
                     continue  # deleted while queued: nothing to account
                 health = census[it.chunk_id]
                 report.pieces_missing += len(health.missing)
-                if not health.recoverable(store.k):
+                if not health.recoverable(cluster.k):
                     # < k survivors: nothing can be decoded right now --
                     # also covers a "whole" chunk whose only alive nodes
                     # are its too-few holders (no rebuild targets exist)
@@ -283,17 +288,20 @@ class RepairManager:
             return
 
         # bulk piece reads per cluster, then ONE decode + ONE encode batch
-        # through the engine seam for the whole cross-cluster sub-batch
+        # *per distinct cluster code* through the engine seam for the
+        # whole cross-cluster sub-batch -- each chunk rebuilds with its
+        # owning cluster's (n, k), never a store-wide global
         pieces: dict[tuple[bytes, int], dict[int, bytes]] = {}
         for cluster_id, its in sorted(by_cluster.items()):
             want = [it.chunk_id for it in its if it.key in targets]
             if want:
                 got = store.clusters[cluster_id].read_pieces_batch(
-                    want, store.k)
+                    want, store.clusters[cluster_id].k)
                 for cid in want:
                     pieces[(cid, cluster_id)] = got[cid]
-        jobs = [(pieces[it.key], it.length) for it in live]
-        _, all_pieces = store.engine.recode_blobs(store.code, jobs)
+        jobs = [(store.clusters[it.cluster_id].code, pieces[it.key],
+                 it.length) for it in live]
+        _, all_pieces = store.engine.recode_blobs_multi(jobs)
         report.n_sub_batches += 1
 
         for it, chunk_pieces in zip(live, all_pieces):

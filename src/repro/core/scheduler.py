@@ -10,10 +10,20 @@ requests from any number of users queue in a ``RequestQueue``; each
 per length bucket across all users in the window -- then fans results
 back out per request.
 
-``SEARSStore.put_files``/``get_files`` are the batch-of-one special case:
-they build a single ``Request`` and push it through the same
-``_batch_put``/``_batch_get`` machinery, so a single-user call is just a
-one-user flush.
+``SEARSStore.put_files``/``get_files``/``delete_file`` are the
+batch-of-one special case: they build a single ``Request`` and push it
+through the same ``_batch_put``/``_batch_get``/``_batch_delete``
+machinery, so a single-user call is just a one-user flush.
+
+Scheduler submits return :class:`RequestFuture` handles -- ``done()``,
+``result()`` (re-raising the request's error), ``exception()`` -- that
+resolve when the owning scheduler flushes (``flush()``/``poll()``/an
+auto-flush).  Calling ``result()`` on a still-queued future flushes the
+scheduler, so the future resolves in submission order with everything
+queued ahead of it.  Requests carry an optional ``storage_class`` so
+heterogeneous traffic (real-time and archival policies) coalesces in one
+window; deletes queue as first-class ``DELETE`` requests and therefore
+serialize with puts/gets in submission order.
 
 Invariants (enforced by ``tests/test_scheduler.py``):
 
@@ -38,6 +48,7 @@ from typing import Any, Callable
 
 PUT = "put"
 GET = "get"
+DELETE = "delete"
 
 
 def _put_payload_bytes(files) -> int:
@@ -59,20 +70,24 @@ def _put_payload_bytes(files) -> int:
 
 @dataclasses.dataclass
 class Request:
-    """One user's queued upload or retrieval (a unit of atomicity).
+    """One user's queued upload, retrieval or deletion (a unit of atomicity).
 
     ``result`` for a put is ``list[UploadStats]``; for a get it is
-    ``list[tuple[bytes, RetrievalStats]]`` in ``filenames`` order.
+    ``list[tuple[bytes, RetrievalStats]]`` in ``filenames`` order; for a
+    delete it is the list of filenames removed.  ``storage_class`` names
+    the :class:`repro.core.classes.StorageClass` policy the request runs
+    under (``None`` -> the store's default class).
     """
 
     request_id: int
     user: str
-    kind: str  # PUT | GET
+    kind: str  # PUT | GET | DELETE
     files: list[tuple[str, bytes]] | None = None  # put payload
-    filenames: list[str] | None = None  # get payload
+    filenames: list[str] | None = None  # get/delete payload
     timestamp: float = 0.0
     local_chunk_ids: set[bytes] | None = None
     rho_fn: Callable[[int], float] | None = None
+    storage_class: str | None = None
     status: str = "queued"  # queued | done | failed
     result: Any = None
     error: BaseException | None = None
@@ -80,6 +95,89 @@ class Request:
     @property
     def ok(self) -> bool:
         return self.status == "done"
+
+
+class RequestFuture:
+    """Handle for a submitted request; resolves at ``flush()``/``poll()``.
+
+    Replaces callers poking ``Request.error``/``Request.result``
+    directly: ``result()`` re-raises the request's failure (or returns
+    its result), ``exception()`` returns it, ``done()`` reports whether
+    the owning scheduler has executed the request yet.  Calling
+    ``result()``/``exception()`` on a still-queued future flushes the
+    scheduler -- the queue drains in submission order, so everything
+    submitted before this request executes first.  The legacy
+    ``status``/``ok``/``error`` views stay readable for observers that
+    must not trigger a flush.
+
+    Migration note: the old submit API returned the ``Request`` itself,
+    whose ``.result`` was a data attribute.  On a future ``.result`` is
+    the *method* -- old-style attribute reads must become ``result()``
+    calls (or use ``future.request.result`` for the raw non-flushing
+    view).
+    """
+
+    __slots__ = ("request", "_scheduler")
+
+    def __init__(self, request: Request, scheduler: "BatchScheduler"):
+        self.request = request
+        self._scheduler = scheduler
+
+    def __repr__(self) -> str:
+        return (f"RequestFuture(id={self.request.request_id}, "
+                f"kind={self.request.kind}, status={self.request.status})")
+
+    # ------------------------------------------------------- future API ---
+    def done(self) -> bool:
+        """True once the request has been executed (successfully or not)."""
+        return self.request.status in ("done", "failed")
+
+    def result(self) -> Any:
+        """The request's result; its error is re-raised here.
+
+        Still-queued requests resolve by flushing the owning scheduler
+        (submission order is preserved -- this request runs after
+        everything queued before it).
+        """
+        self._resolve()
+        if self.request.error is not None:
+            raise self.request.error
+        return self.request.result
+
+    def exception(self) -> BaseException | None:
+        """The request's failure, if any (resolving like ``result()``)."""
+        self._resolve()
+        return self.request.error
+
+    def _resolve(self) -> None:
+        if not self.done():
+            self._scheduler.flush()
+
+    # ------------------------------------- legacy non-flushing views ------
+    @property
+    def request_id(self) -> int:
+        return self.request.request_id
+
+    @property
+    def user(self) -> str:
+        return self.request.user
+
+    @property
+    def kind(self) -> str:
+        return self.request.kind
+
+    @property
+    def status(self) -> str:
+        return self.request.status
+
+    @property
+    def ok(self) -> bool:
+        return self.request.ok
+
+    @property
+    def error(self) -> BaseException | None:
+        """The recorded failure *without* resolving (no flush)."""
+        return self.request.error
 
 
 class RequestQueue:
@@ -97,18 +195,28 @@ class RequestQueue:
         return req
 
     def submit_put(self, user: str, files: list[tuple[str, bytes]],
-                   timestamp: float = 0.0) -> Request:
+                   timestamp: float = 0.0,
+                   storage_class: str | None = None) -> Request:
         req = Request(request_id=self._next_id, user=user, kind=PUT,
-                      files=list(files), timestamp=timestamp)
+                      files=list(files), timestamp=timestamp,
+                      storage_class=storage_class)
         self._next_id += 1
         return self._submit(req)
 
     def submit_get(self, user: str, filenames: list[str],
                    local_chunk_ids: set[bytes] | None = None,
-                   rho_fn: Callable[[int], float] | None = None) -> Request:
+                   rho_fn: Callable[[int], float] | None = None,
+                   storage_class: str | None = None) -> Request:
         req = Request(request_id=self._next_id, user=user, kind=GET,
                       filenames=list(filenames),
-                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn)
+                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn,
+                      storage_class=storage_class)
+        self._next_id += 1
+        return self._submit(req)
+
+    def submit_delete(self, user: str, filenames: list[str]) -> Request:
+        req = Request(request_id=self._next_id, user=user, kind=DELETE,
+                      filenames=list(filenames))
         self._next_id += 1
         return self._submit(req)
 
@@ -126,6 +234,7 @@ class SchedulerStats:
     n_failed: int = 0
     n_put_windows: int = 0  # coalesced put batches executed
     n_get_windows: int = 0
+    n_delete_windows: int = 0
     n_auto_flushes: int = 0  # flushes triggered by size/interval thresholds
     gf_launches: int = 0  # GF(256) launches issued during flushes
     sha1_launches: int = 0
@@ -150,10 +259,13 @@ class BatchScheduler:
 
     Requests are drained in submit order and grouped into maximal
     consecutive same-kind runs; each run becomes one coalesced
-    ``_batch_put``/``_batch_get`` window, so the all-puts-then-all-gets
-    pattern collapses to exactly two windows while mixed traffic keeps
-    its put/get ordering (a get submitted after a put in the same flush
-    still observes that put).
+    ``_batch_put``/``_batch_get``/``_batch_delete`` window, so the
+    all-puts-then-all-gets pattern collapses to exactly two windows while
+    mixed traffic keeps its ordering (a get submitted after a put -- or
+    after a delete -- in the same flush still observes it).  Submits
+    return :class:`RequestFuture` handles; a window may mix storage
+    classes, and the shared batches bucket by (code, length) so the
+    launch count stays O(code buckets x length buckets).
 
     **Auto-flush**: with ``flush_bytes`` set, a submit that lifts the
     pending put payload to/over the threshold flushes the whole queue
@@ -194,21 +306,41 @@ class BatchScheduler:
 
     # ------------------------------------------------------------- submit --
     def submit_put(self, user: str, files: list[tuple[str, bytes]],
-                   timestamp: float = 0.0) -> Request:
-        req = self.queue.submit_put(user, files, timestamp=timestamp)
+                   timestamp: float = 0.0,
+                   storage_class: str | None = None) -> RequestFuture:
+        req = self.queue.submit_put(user, files, timestamp=timestamp,
+                                    storage_class=storage_class)
+        future = RequestFuture(req, self)
         # count from the queue's materialized copy -- the caller's `files`
         # may be a generator the queue already exhausted
         self._note_submit(_put_payload_bytes(req.files))
-        return req
+        return future
 
     def submit_get(self, user: str, filenames: list[str],
                    local_chunk_ids: set[bytes] | None = None,
-                   rho_fn: Callable[[int], float] | None = None) -> Request:
+                   rho_fn: Callable[[int], float] | None = None,
+                   storage_class: str | None = None) -> RequestFuture:
         req = self.queue.submit_get(user, filenames,
                                     local_chunk_ids=local_chunk_ids,
-                                    rho_fn=rho_fn)
+                                    rho_fn=rho_fn,
+                                    storage_class=storage_class)
+        future = RequestFuture(req, self)
         self._note_submit(0)
-        return req
+        return future
+
+    def submit_delete(self, user: str,
+                      filenames: list[str]) -> RequestFuture:
+        """Queue a delete so it serializes with pending puts/gets.
+
+        A direct ``store.delete_file`` call executes immediately -- it
+        can land *before* an already-submitted-but-unflushed get and
+        change that get's result versus sequential execution.  Submitting
+        the delete keeps the whole history in submission order.
+        """
+        req = self.queue.submit_delete(user, filenames)
+        future = RequestFuture(req, self)
+        self._note_submit(0)
+        return future
 
     def _note_submit(self, nbytes: int) -> None:
         if self._window_opened is None:
@@ -267,9 +399,12 @@ class BatchScheduler:
                 if window[0].kind == PUT:
                     self.store._batch_put(window)
                     self.stats.n_put_windows += 1
-                else:
+                elif window[0].kind == GET:
                     self.store._batch_get(window)
                     self.stats.n_get_windows += 1
+                else:
+                    self.store._batch_delete(window)
+                    self.stats.n_delete_windows += 1
             except Exception as exc:
                 # backstop: _batch_put/_batch_get record per-request
                 # failures themselves, but if one raises anyway no request

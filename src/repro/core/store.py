@@ -4,28 +4,42 @@ Composes the paper's pipeline end to end:
 
   upload:   CDC chunk -> SHA-1 id -> intra-file dedup (client) ->
             inter-file dedup at the switching node (scope set by the
-            binding scheme) -> (n,k) RS encode at the coding node ->
+            storage class) -> (n,k) RS encode at the coding node ->
             one piece per storage node of the bound cluster.
 
   download: fetch file chunk-meta-data from the switching node -> skip
             chunks already in the device's local store -> k-of-n piece
             reads per missing chunk -> GF(256) decode -> reassemble.
 
+**Storage classes** (the paper's "flexible mixing of different
+configurations"): ``SEARSStore(classes=[StorageClass.realtime(),
+StorageClass.archival()])`` partitions the clusters into per-class
+*pools*; every cluster carries its own ``(n, k)`` and every request picks
+its policy with ``storage_class=``.  A file's class lands in its
+``FileMeta``, and retrieval / deletion / repair resolve the erasure code
+from the *owning cluster* of each chunk -- never from a store-wide
+global.  The legacy single-config kwargs (``n=``, ``k=``, ``binding=``,
+``chunker=``) still work as a deprecation shim that builds a one-class
+store.
+
 Architecture: a **control plane** (``plan_*`` -- dedup lookups,
 binding/placement, reservations; pure per-chunk metadata) feeds a
 **data plane** (a ``repro.core.engine.CodingEngine`` -- batched CDC
 chunking, SHA-1, RS encode, RS decode over bulk bytes; the whole put
-window is chunked in one gear pass).  ``put_files``/``get_files``
-amortize one data-plane batch (and on TPU, one kernel launch per length
-bucket) across many files; ``put_file``/``get_file`` are the batch-of-one
-special case.  Both engines are byte-identical, so placement and stats do
-not depend on the engine choice.
+window is chunked in one gear pass per chunker config).
+``put_files``/``get_files`` amortize one data-plane batch across many
+files; a mixed-class window buckets its kernel work by ``(code, padded
+length)``, so it still issues O(code buckets x length buckets) GF/SHA-1
+launches -- never O(files).  Both engines are byte-identical, so
+placement and stats do not depend on the engine choice.
 
 Many *users'* traffic coalesces the same way: ``scheduler()`` returns a
 ``repro.core.scheduler.BatchScheduler`` whose flush windows share one
 data-plane batch across all queued requests (the paper's multi-user
-switching node); ``put_files``/``get_files`` are internally just a
-one-request flush of that machinery (``_batch_put``/``_batch_get``).
+switching node); submits return ``RequestFuture`` handles that resolve at
+``flush()``/``poll()``.  ``put_files``/``get_files``/``delete_file`` are
+internally just one-request flushes of that machinery
+(``_batch_put``/``_batch_get``/``_batch_delete``).
 
 Wall-clock retrieval time is simulated by ``repro.core.latency`` (no real
 network in this container); byte-level correctness is real -- every piece
@@ -35,19 +49,20 @@ is stored, read back and decoded.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
 from repro.core import chunking, dedup, hashing
 from repro.core.binding import make_binding
 from repro.core.chunking import DEFAULT_CHUNKER, Chunker
+from repro.core.classes import StorageClass, partition_pools
 from repro.core.cluster import Cluster, SwitchingNode
 from repro.core.engine import CodingEngine, make_engine
 from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
 from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
                                  UploadPlan)
 from repro.core.repair import RepairManager, RepairReport
-from repro.core.rs_code import RSCode
 
 
 @dataclasses.dataclass
@@ -73,12 +88,45 @@ class RetrievalStats:
 
 
 @dataclasses.dataclass
+class ClassStats:
+    """Per-storage-class slice of :class:`StoreStats`.
+
+    ``piece_bytes``/``index_bytes``/``n_unique_chunks`` are pool-level
+    (classes sharing a pool tag share them); ``logical_bytes``/``n_files``
+    are tracked exactly per class.  ``meta_bytes`` is this class's share
+    of the switching-node tables.
+    """
+
+    name: str
+    n: int
+    k: int
+    n_clusters: int
+    logical_bytes: int
+    piece_bytes: int
+    index_bytes: int  # chunk records of the pool + this class's file meta
+    n_files: int
+    n_unique_chunks: int
+
+    @property
+    def redundancy_overhead(self) -> float:
+        """Space expansion n/k of the class's erasure code."""
+        return self.n / self.k
+
+    @property
+    def dedup_ratio(self) -> float:
+        """Class metric: original bytes / pool consumption (incl. index)."""
+        return self.logical_bytes / max(1, self.piece_bytes
+                                        + self.index_bytes)
+
+
+@dataclasses.dataclass
 class StoreStats:
     logical_bytes: int  # total size of all original files (numerator)
     piece_bytes: int  # bytes on storage nodes (post dedup + coding)
     index_bytes: int  # chunk index + chunk-meta-data tables
     n_unique_chunks: int
     n_files: int
+    per_class: dict[str, ClassStats] = dataclasses.field(default_factory=dict)
 
     @property
     def consumed_bytes(self) -> int:
@@ -91,27 +139,114 @@ class StoreStats:
 
 
 class SEARSStore:
-    def __init__(self, n: int = 10, k: int = 5, num_clusters: int = 20,
-                 node_capacity: int = 1 << 30, binding: str = "ulb",
-                 chunker: Chunker = DEFAULT_CHUNKER,
+    def __init__(self, n: int | None = None, k: int | None = None,
+                 num_clusters: int = 20, node_capacity: int = 1 << 30,
+                 binding: str | None = None, chunker: Chunker | None = None,
                  latency: LatencyParams | None = None, seed: int = 0,
                  hash_fn=hashing.chunk_id,
-                 engine: str | CodingEngine = "numpy") -> None:
-        self.code = RSCode(n, k)
-        self.n, self.k = n, k
-        self.chunker = chunker
-        self.clusters = [Cluster(i, n, node_capacity)
+                 engine: str | CodingEngine = "numpy",
+                 classes: list[StorageClass] | None = None) -> None:
+        legacy = [kw for kw, v in (("n", n), ("k", k),
+                                   ("binding", binding),
+                                   ("chunker", chunker))
+                  if v is not None]
+        if classes:
+            if legacy:
+                raise ValueError(
+                    f"pass classes= or the legacy kwargs {legacy}, not both")
+            class_list = list(classes)
+        else:
+            if legacy:
+                warnings.warn(
+                    f"SEARSStore({', '.join(legacy)}) single-config kwargs "
+                    "are deprecated; pass classes=[StorageClass(...)] "
+                    "instead", DeprecationWarning, stacklevel=2)
+            ch = chunker if chunker is not None else DEFAULT_CHUNKER
+            class_list = [StorageClass(
+                name="default", n=10 if n is None else n,
+                k=5 if k is None else k,
+                chunk_min=ch.min_size, chunk_avg=ch.avg_size,
+                chunk_max=ch.max_size,
+                binding=binding if binding is not None else "ulb")]
+
+        self.classes: dict[str, StorageClass] = {c.name: c
+                                                 for c in class_list}
+        self.default_class = class_list[0]
+        self.pools = partition_pools(class_list, num_clusters)
+        pool_nk = {c.pool_tag: (c.n, c.k) for c in class_list}
+        owner = {cid: tag for tag, cids in self.pools.items()
+                 for cid in cids}
+        self.clusters = [Cluster(i, pool_nk[owner[i]][0], node_capacity,
+                                 k=pool_nk[owner[i]][1])
                          for i in range(num_clusters)]
+        # per-class binding scheme instances (ULB assignment state is
+        # class-local: the same user may bind differently per class)
+        self._bindings = {c.name: make_binding(c.binding)
+                          for c in class_list}
         self.index = dedup.ChunkIndex()
-        self.binding = make_binding(binding)
         self.switching: dict[str, SwitchingNode] = {}
         self.latency = latency or LatencyParams()
         self.rng = np.random.default_rng(seed)
         self.hash_fn = hash_fn
         self.engine = make_engine(engine, hash_fn)
         self.repair = RepairManager(self, sub_batch=self.REPAIR_BATCH)
-        self.logical_bytes = 0
-        self.n_files = 0
+        self._logical = {c.name: 0 for c in class_list}
+        self._nfiles = {c.name: 0 for c in class_list}
+
+    # ---------------------------------------------- class/pool resolution --
+    def _class(self, name: str | None) -> StorageClass:
+        if name is None:
+            return self.default_class
+        try:
+            return self.classes[name]
+        except KeyError:
+            raise KeyError(f"unknown storage class {name!r}; have "
+                           f"{sorted(self.classes)}") from None
+
+    def _pool(self, cls: StorageClass) -> list[Cluster]:
+        return [self.clusters[i] for i in self.pools[cls.pool_tag]]
+
+    def _dedup_scope(self, cls: StorageClass, user: str):
+        """Chunk-index scope for a class: binding scope, capped to the pool.
+
+        The binding scheme's scope (ULB: the user's bound cluster; CLB:
+        global) never escapes the class's pool unless the class opted
+        into ``dedup="global"`` -- pools of different classes must not
+        dedup against each other by accident.
+        """
+        scope = self._bindings[cls.name].dedup_scope(user, self._pool(cls))
+        if scope is None and cls.dedup != "global":
+            scope = self.pools[cls.pool_tag]
+        return scope
+
+    # -- legacy single-config views (the default class's policy) ----------
+    @property
+    def n(self) -> int:
+        return self.default_class.n
+
+    @property
+    def k(self) -> int:
+        return self.default_class.k
+
+    @property
+    def code(self):
+        return self.default_class.code
+
+    @property
+    def chunker(self) -> Chunker:
+        return self.default_class.chunker
+
+    @property
+    def binding(self):
+        return self._bindings[self.default_class.name]
+
+    @property
+    def logical_bytes(self) -> int:
+        return sum(self._logical.values())
+
+    @property
+    def n_files(self) -> int:
+        return sum(self._nfiles.values())
 
     # ------------------------------------------------------------------
     def _switch(self, user: str) -> SwitchingNode:
@@ -120,16 +255,18 @@ class SEARSStore:
         return self.switching[user]
 
     # ------------------------------------------------------- scheduling ---
-    def scheduler(self, queue=None):
+    def scheduler(self, queue=None, **kwargs):
         """A ``BatchScheduler`` coalescing many users' traffic on this store.
 
         Requests submitted to the scheduler share data-plane batches (one
-        SHA-1 launch and one GF(256) launch per length bucket per flush
-        window across *all* queued users) while staying byte-identical to
-        sequential per-user ``put_files``/``get_files`` calls.
+        SHA-1 launch and one GF(256) launch per (code, length) bucket per
+        flush window across *all* queued users) while staying
+        byte-identical to sequential per-user ``put_files``/``get_files``
+        calls.  Submits return :class:`repro.core.scheduler.RequestFuture`
+        handles that resolve at ``flush()``/``poll()``.
         """
         from repro.core.scheduler import BatchScheduler
-        return BatchScheduler(self, queue=queue)
+        return BatchScheduler(self, queue=queue, **kwargs)
 
     def _one_request(self, req) -> None:
         """Raise the failure of a batch-of-one request, if any."""
@@ -138,13 +275,15 @@ class SEARSStore:
 
     # ----------------------------------------------------------- upload ---
     def put_file(self, user: str, filename: str, data: bytes,
-                 timestamp: float = 0.0) -> UploadStats:
-        return self.put_files(user, [(filename, data)],
-                              timestamp=timestamp)[0]
+                 timestamp: float = 0.0,
+                 storage_class: str | None = None) -> UploadStats:
+        return self.put_files(user, [(filename, data)], timestamp=timestamp,
+                              storage_class=storage_class)[0]
 
     def put_files(self, user: str, files: list[tuple[str, bytes]],
-                  timestamp: float = 0.0) -> list[UploadStats]:
-        """Upload a batch of files with batched data-plane work.
+                  timestamp: float = 0.0,
+                  storage_class: str | None = None) -> list[UploadStats]:
+        """Upload a batch of files under one storage class's policy.
 
         A one-user flush of the cross-user batch machinery: hashing runs
         as one engine batch over every chunk of every file; the control
@@ -157,7 +296,7 @@ class SEARSStore:
         """
         from repro.core.scheduler import PUT, Request
         req = Request(request_id=0, user=user, kind=PUT, files=list(files),
-                      timestamp=timestamp)
+                      timestamp=timestamp, storage_class=storage_class)
         self._batch_put([req])
         self._one_request(req)
         return req.result
@@ -165,23 +304,27 @@ class SEARSStore:
     def _batch_put(self, requests) -> None:
         """Shared put window: coalesce many requests' data-plane work.
 
-        Each request (one user's file batch) is a unit of atomicity: a
-        plan-phase failure rolls back that request alone; an execute
-        failure rolls back exactly the requests whose files reference a
-        chunk copy that failed to land.  Surviving requests commit as if
-        the failed ones had been issued -- and failed -- separately.
-        Results/errors are recorded on the request objects; this method
-        raises nothing per-request.
+        Each request (one user's file batch, under one storage class) is
+        a unit of atomicity: a plan-phase failure rolls back that request
+        alone; an execute failure rolls back exactly the requests whose
+        files reference a chunk copy that failed to land.  Surviving
+        requests commit as if the failed ones had been issued -- and
+        failed -- separately.  Results/errors are recorded on the request
+        objects; this method raises nothing per-request.
         """
-        # data plane: chunk + hash every file of every request in one batch.
-        # Payloads are normalized per request first (a malformed payload --
-        # non-bytes, bad pair -- fails only its own request and stays out
-        # of the shared batch); the surviving window then runs through one
-        # engine chunking pass (one gear launch) and one hash batch.
+        # data plane: chunk + hash every file of every request in one
+        # batch.  Payloads are normalized per request first (a malformed
+        # payload or unknown storage class fails only its own request and
+        # stays out of the shared batch); the surviving window then runs
+        # through one engine chunking pass per chunker config and one
+        # hash batch.
         validated: list[list[tuple[str, bytes, np.ndarray]]] = []
+        req_cls: list[StorageClass | None] = []
         for req in requests:
             per_file = []
+            cls = None
             try:
+                cls = self._class(req.storage_class)
                 for filename, data in req.files:
                     per_file.append((filename, data,
                                      chunking.as_bytes_array(data)))
@@ -189,12 +332,13 @@ class SEARSStore:
                 req.status, req.error = "failed", exc
                 per_file = []
             validated.append(per_file)
+            req_cls.append(cls)
 
-        window_blobs = [arr for per_file in validated
-                        for _, _, arr in per_file]
+        window_jobs = [(cls.chunker, arr)
+                       for cls, per_file in zip(req_cls, validated)
+                       for _, _, arr in per_file]
         try:
-            window_spans = self.engine.chunk_blobs(self.chunker,
-                                                   window_blobs)
+            window_spans = self.engine.chunk_blobs_multi(window_jobs)
         except Exception as exc:
             # shared chunk-pass failure: nothing planned or landed yet --
             # every live request in the window fails (mirrors the shared
@@ -224,7 +368,7 @@ class SEARSStore:
         # like sequential calls); a failure unwinds only its own request
         plans_by_req: dict[int, list[UploadPlan]] = {}
         pos = 0
-        for req, per_file in zip(requests, chunked):
+        for req, cls, per_file in zip(requests, req_cls, chunked):
             if req.error is not None:
                 continue
             plans: list[UploadPlan] = []
@@ -236,7 +380,7 @@ class SEARSStore:
                     req_pos += len(spans)
                     plans.append(self._plan_put(
                         req.user, filename, data, spans, ids, chunks,
-                        req.timestamp, request_id=req.request_id))
+                        req.timestamp, cls, request_id=req.request_id))
                 plans_by_req[req.request_id] = plans
             except Exception as exc:
                 # completed plans still hold their reservations (the
@@ -244,11 +388,11 @@ class SEARSStore:
                 for p in plans:
                     for t in p.encode_tasks:
                         self.clusters[t.cluster_id].release_reservation(
-                            self.n * t.piece_len)
+                            self.clusters[t.cluster_id].n * t.piece_len)
                 self._rollback_files(req.user, plans)
                 req.status, req.error = "failed", exc
 
-        # data plane: one shared encode batch + bulk piece writes
+        # data plane: one shared encode batch per code + bulk piece writes
         live = [r for r in requests if r.error is None]
         all_plans = [p for r in live for p in plans_by_req[r.request_id]]
         try:
@@ -277,15 +421,16 @@ class SEARSStore:
                             n_unique_in_file=p.n_unique_in_file,
                             n_new_chunks=len(p.encode_tasks),
                             bytes_uploaded=p.bytes_uploaded,
-                            piece_bytes_written=self.n * sum(
-                                t.piece_len for t in p.encode_tasks))
+                            piece_bytes_written=sum(
+                                self.clusters[t.cluster_id].n * t.piece_len
+                                for t in p.encode_tasks))
                 for p in plans]
             req.status = "done"
 
     def _rollback_files(self, user: str, plans: list[UploadPlan]) -> None:
         """Drop the metadata of planned files after a failure.
 
-        ``delete_file`` releases the index references; new chunks hit
+        ``_delete_now`` releases the index references; new chunks hit
         refcount zero, which removes their index records and deletes any
         pieces a partially-run execute phase already landed.  A plan whose
         file was since overwritten (its ``entries`` are no longer the live
@@ -297,31 +442,37 @@ class SEARSStore:
         for p in plans:
             meta = sw.table.get(p.filename)
             if meta is not None and meta.entries is p.entries:
-                self.delete_file(user, p.filename)
+                self._delete_now(user, p.filename)
 
     def _plan_put(self, user: str, filename: str, data: bytes,
                   spans: list[tuple[int, int]], ids: list[bytes],
                   chunks: list[bytes], timestamp: float,
-                  request_id: int = -1) -> UploadPlan:
+                  cls: StorageClass, request_id: int = -1) -> UploadPlan:
         """Control plane for one file: dedup, placement, metadata.
 
-        Index and chunk-meta-data mutations happen here; clusters chosen
-        for new chunks get their piece bytes *reserved* so the binding
-        scheme sees the same free-space trajectory as the old
-        store-immediately path (placement is plan-order deterministic).
-        A mid-plan failure (e.g. out of storage) unwinds this file's own
-        reservations and index mutations before propagating.
+        All policy comes from ``cls``: its pool bounds placement and (by
+        default) dedup scope, its code sizes the pieces, its binding
+        scheme picks clusters inside the pool.  Index and chunk-meta-data
+        mutations happen here; clusters chosen for new chunks get their
+        piece bytes *reserved* so the binding scheme sees the same
+        free-space trajectory as the old store-immediately path
+        (placement is plan-order deterministic).  A mid-plan failure
+        (e.g. out of storage) unwinds this file's own reservations and
+        index mutations before propagating.
         """
         sw = self._switch(user)
         if filename in sw.table:
-            self.delete_file(user, filename)
+            self._delete_now(user, filename)
 
         unique_ids, _ = dedup.dedup_file(ids)  # intra-file dedup (client)
         by_id: dict[bytes, bytes] = {}
         for cid, chunk in zip(ids, chunks):
             by_id.setdefault(cid, chunk)
 
-        scope = self.binding.dedup_scope(user, self.clusters)
+        scope = self._dedup_scope(cls, user)
+        code = cls.code
+        binding = self._bindings[cls.name]
+        pool = self._pool(cls)
         tasks: list[EncodeTask] = []
         resolved: dict[bytes, int] = {}  # chunk id -> cluster holding a copy
 
@@ -330,10 +481,10 @@ class SEARSStore:
                 info = self.index.lookup(cid, scope)  # inter-file dedup
                 if info is None:
                     chunk = by_id[cid]
-                    piece_len = self.code.piece_len(len(chunk))
-                    cluster = self.binding.choose_cluster(
-                        user, cid, self.n * piece_len, self.clusters)
-                    cluster.reserve(self.n * piece_len)
+                    piece_len = code.piece_len(len(chunk))
+                    cluster = binding.choose_cluster(
+                        user, cid, cls.n * piece_len, pool)
+                    cluster.reserve(cls.n * piece_len)
                     self.index.add(cid, cluster.cluster_id, len(chunk))
                     tasks.append(EncodeTask(chunk_id=cid, data=chunk,
                                             cluster_id=cluster.cluster_id,
@@ -346,35 +497,40 @@ class SEARSStore:
         except Exception:
             for t in tasks:
                 self.clusters[t.cluster_id].release_reservation(
-                    self.n * t.piece_len)
+                    cls.n * t.piece_len)
             for cid, cluster_id in resolved.items():
                 self.index.release(cid, cluster_id)  # drops new records
             raise
 
         entries = [(cid, resolved[cid]) for cid in ids]
         meta = dedup.FileMeta(timestamp=timestamp, entries=entries,
-                              lengths=[l for _, l in spans])
+                              lengths=[l for _, l in spans],
+                              storage_class=cls.name)
         sw.put_meta(filename, meta)
-        self.logical_bytes += len(data)
-        self.n_files += 1
+        self._logical[cls.name] += len(data)
+        self._nfiles[cls.name] += 1
         # the plan shares the *same* entries object as the stored meta, so
         # rollback can tell "this file is still my version" by identity
         return UploadPlan(user=user, filename=filename, timestamp=timestamp,
                           file_bytes=len(data), n_chunks=len(ids),
                           n_unique_in_file=len(unique_ids),
                           encode_tasks=tasks, entries=entries,
-                          request_id=request_id)
+                          request_id=request_id, storage_class=cls.name)
 
     def _execute_uploads(self, plans: list[UploadPlan]
                          ) -> tuple[set[tuple[bytes, int]], Exception | None]:
         """Data plane: batched RS encode + bulk per-cluster piece writes.
 
-        Returns ``(failed_copies, error)``: the (chunk_id, cluster_id)
-        copies whose pieces could not be stored (dead-node writes) and the
-        first write error, so the caller can demux the failure back to the
-        requests that reference those copies.  Cluster writes are
-        independent -- one failing cluster never aborts the others.  An
-        encode-batch failure raises (after releasing all reservations).
+        Encode jobs are bucketed by the owning cluster's code (one engine
+        batch per distinct ``(n, k)``, each internally length-bucketed),
+        so a mixed-class window costs O(code buckets x length buckets)
+        GF launches.  Returns ``(failed_copies, error)``: the (chunk_id,
+        cluster_id) copies whose pieces could not be stored (dead-node
+        writes) and the first write error, so the caller can demux the
+        failure back to the requests that reference those copies.
+        Cluster writes are independent -- one failing cluster never
+        aborts the others.  An encode-batch failure raises (after
+        releasing all reservations).
         """
         tasks = [t for p in plans for t in p.encode_tasks]
         # a later file in the batch may have overwritten/deleted an earlier
@@ -385,14 +541,16 @@ class SEARSStore:
                 if self.index.get(t.chunk_id, t.cluster_id) is None]
         for t in dead:
             self.clusters[t.cluster_id].release_reservation(
-                self.n * t.piece_len)
+                self.clusters[t.cluster_id].n * t.piece_len)
         reserved: dict[int, int] = {}
         for t in live:
-            reserved[t.cluster_id] = (reserved.get(t.cluster_id, 0)
-                                      + self.n * t.piece_len)
+            reserved[t.cluster_id] = (
+                reserved.get(t.cluster_id, 0)
+                + self.clusters[t.cluster_id].n * t.piece_len)
         try:
-            pieces_per_task = self.engine.encode_blobs(
-                self.code, [t.data for t in live])  # coding nodes
+            pieces_per_task = self.engine.encode_blobs_multi(
+                [(self.clusters[t.cluster_id].code, t.data)
+                 for t in live])  # coding nodes
         except Exception:
             for cluster_id, nbytes in reserved.items():
                 self.clusters[cluster_id].release_reservation(nbytes)
@@ -406,7 +564,7 @@ class SEARSStore:
         for cluster_id, items in by_cluster.items():
             try:
                 self.clusters[cluster_id].store_chunks(
-                    items, min_pieces=self.k,
+                    items, min_pieces=self.clusters[cluster_id].k,
                     reserved=reserved.pop(cluster_id, 0))
             except Exception as exc:  # store_chunks released the bytes
                 failed.update((cid, cluster_id) for cid, _ in items)
@@ -416,26 +574,35 @@ class SEARSStore:
     # --------------------------------------------------------- download ---
     def get_file(self, user: str, filename: str,
                  local_chunk_ids: set[bytes] | None = None,
-                 rho_fn=None) -> tuple[bytes, RetrievalStats]:
+                 rho_fn=None,
+                 storage_class: str | None = None
+                 ) -> tuple[bytes, RetrievalStats]:
         return self.get_files(user, [filename],
                               local_chunk_ids=local_chunk_ids,
-                              rho_fn=rho_fn)[0]
+                              rho_fn=rho_fn,
+                              storage_class=storage_class)[0]
 
     def get_files(self, user: str, filenames: list[str],
                   local_chunk_ids: set[bytes] | None = None,
-                  rho_fn=None) -> list[tuple[bytes, RetrievalStats]]:
-        """Retrieve a batch of files with one batched decode.
+                  rho_fn=None,
+                  storage_class: str | None = None
+                  ) -> list[tuple[bytes, RetrievalStats]]:
+        """Retrieve a batch of files with one batched decode per code.
 
         A one-user flush of the cross-user batch machinery: piece reads
         are bulk per cluster (modeling per-batch parallel node requests
         rather than serial per-chunk fetches) and all non-systematic
-        decodes across the batch share engine launches.  Any failure
-        (missing file, unrecoverable chunk) raises.
+        decodes across the batch share engine launches, bucketed by the
+        owning cluster's code.  ``storage_class`` is an optional
+        assertion: when given, a file stored under a different class
+        fails with ``KeyError``.  Any failure (missing file,
+        unrecoverable chunk) raises.
         """
         from repro.core.scheduler import GET, Request
         req = Request(request_id=0, user=user, kind=GET,
                       filenames=list(filenames),
-                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn)
+                      local_chunk_ids=local_chunk_ids, rho_fn=rho_fn,
+                      storage_class=storage_class)
         self._batch_get([req])
         self._one_request(req)
         return req.result
@@ -444,18 +611,20 @@ class SEARSStore:
         """Shared get window: coalesce many requests' reads and decodes.
 
         All requests' missing chunks are fetched with one bulk read per
-        cluster and decoded in one shared engine batch.  Failures stay
-        per-request: a missing file or an unrecoverable chunk (< k live
-        pieces) fails only the request that referenced it -- its jobs are
-        excluded from the shared decode so a neighbour's batch is never
-        poisoned.  Results/errors are recorded on the request objects.
+        cluster and decoded in shared engine batches (one per distinct
+        cluster code).  Failures stay per-request: a missing file or an
+        unrecoverable chunk (< the owning cluster's k live pieces) fails
+        only the request that referenced it -- its jobs are excluded from
+        the shared decode so a neighbour's batch is never poisoned.
+        Results/errors are recorded on the request objects.
         """
         plans_by_req: dict[int, list[RetrievalPlan]] = {}
         for req in requests:
             try:
                 plans_by_req[req.request_id] = [
                     self._plan_get(req.user, fn, req.local_chunk_ids,
-                                   request_id=req.request_id)
+                                   request_id=req.request_id,
+                                   storage_class=req.storage_class)
                     for fn in req.filenames]
             except Exception as exc:
                 req.status, req.error = "failed", exc
@@ -473,7 +642,8 @@ class SEARSStore:
                 by_cluster.setdefault(t.cluster_id, []).append(t)
             for cluster_id, tasks in by_cluster.items():
                 got = self.clusters[cluster_id].read_pieces_batch(
-                    [t.chunk_id for t in tasks], self.k)
+                    [t.chunk_id for t in tasks],
+                    self.clusters[cluster_id].k)
                 for t in tasks:
                     t.pieces = got[t.chunk_id]
         except Exception as exc:
@@ -486,8 +656,8 @@ class SEARSStore:
         # repair queue so hot degraded chunks heal without waiting for a
         # full scan (the hint censuses the chunk and drops false alarms,
         # e.g. a holder that is merely down with its piece intact)
-        systematic = set(range(self.k))
         for t in all_tasks:
+            systematic = set(range(self.clusters[t.cluster_id].k))
             if t.pieces is not None and set(t.pieces) != systematic:
                 self.repair.hint(t.chunk_id, t.cluster_id)
 
@@ -496,24 +666,27 @@ class SEARSStore:
         for req in live:
             for p in plans_by_req[req.request_id]:
                 for t in p.fetch_tasks:
-                    if len(t.pieces) < self.k and req.error is None:
+                    want = self.clusters[t.cluster_id].k
+                    if len(t.pieces) < want and req.error is None:
                         req.status = "failed"
                         req.error = ValueError(
-                            f"need >= k={self.k} pieces to decode, got "
+                            f"need >= k={want} pieces to decode, got "
                             f"{len(t.pieces)} (chunk {t.chunk_id.hex()})")
         live = [r for r in live if r.error is None]
 
-        # shared decode, deduplicated: a chunk referenced by several tasks
-        # (cross-user or cross-file redundancy) is decoded once and the
-        # blob fanned back out to every referencing plan
+        # shared decode, deduplicated and bucketed by the owning cluster's
+        # code: a chunk referenced by several tasks (cross-user or
+        # cross-file redundancy) is decoded once and the blob fanned back
+        # out to every referencing plan
         uniq: dict[tuple[bytes, int], FetchTask] = {}
         for req in live:
             for p in plans_by_req[req.request_id]:
                 for t in p.fetch_tasks:
                     uniq.setdefault((t.chunk_id, t.cluster_id), t)
         try:
-            blobs = self.engine.decode_blobs(
-                self.code, [(t.pieces, t.length) for t in uniq.values()])
+            blobs = self.engine.decode_blobs_multi(
+                [(self.clusters[t.cluster_id].code, t.pieces, t.length)
+                 for t in uniq.values()])
         except Exception as exc:
             for req in live:
                 req.status, req.error = "failed", exc
@@ -537,10 +710,20 @@ class SEARSStore:
 
     def _plan_get(self, user: str, filename: str,
                   local_chunk_ids: set[bytes] | None,
-                  request_id: int = -1) -> RetrievalPlan:
-        """Control plane: meta lookup + unique-missing-chunk fetch list."""
+                  request_id: int = -1,
+                  storage_class: str | None = None) -> RetrievalPlan:
+        """Control plane: meta lookup + unique-missing-chunk fetch list.
+
+        Per-chunk piece lengths come from the *owning cluster's* code --
+        under mixed classes (or global-scope dedup) one file may
+        reference chunks living under different ``(n, k)``.
+        """
         sw = self._switch(user)
         meta = sw.get_meta(filename)
+        if storage_class is not None and meta.storage_class != storage_class:
+            raise KeyError(
+                f"{filename!r} is stored under class "
+                f"{meta.storage_class!r}, not {storage_class!r}")
         local = local_chunk_ids or set()
 
         tasks: list[FetchTask] = []
@@ -555,7 +738,8 @@ class SEARSStore:
                 raise KeyError(f"chunk {cid.hex()} lost from index")
             tasks.append(FetchTask(
                 chunk_id=cid, cluster_id=cluster_id, length=info.length,
-                piece_len=self.code.piece_len(info.length)))
+                piece_len=self.clusters[cluster_id].code.piece_len(
+                    info.length)))
             share_bytes[cluster_id] = (share_bytes.get(cluster_id, 0)
                                        + info.length)
         return RetrievalPlan(user=user, filename=filename, meta=meta,
@@ -566,15 +750,16 @@ class SEARSStore:
                   rho_fn) -> tuple[bytes, RetrievalStats]:
         meta = plan.meta
         out = bytearray()
-        for (cid, _), ln in zip(meta.entries, meta.lengths):
+        for (cid, cluster_id), ln in zip(meta.entries, meta.lengths):
             blob = decoded.get(cid)
             if blob is None:
-                blob = self._read_local_placeholder(cid, ln)
+                blob = self._read_local_placeholder(cid, cluster_id, ln)
             out += blob[:ln]
 
+        cls = self.classes.get(meta.storage_class, self.default_class)
         shares = [ClusterShare(cl, nb, rho=(rho_fn(cl) if rho_fn else 0.0))
                   for cl, nb in plan.share_bytes.items()]
-        t = retrieval_time(shares, self.n, self.k, self.latency, self.rng)
+        t = retrieval_time(shares, cls.n, cls.k, self.latency, self.rng)
         stats = RetrievalStats(filename=plan.filename, file_bytes=meta.size,
                                time_s=t, n_chunks=len(meta.entries),
                                n_fetched=len(plan.fetch_tasks),
@@ -582,21 +767,61 @@ class SEARSStore:
                                clusters_touched=len(plan.share_bytes))
         return bytes(out), stats
 
-    def _read_local_placeholder(self, cid: bytes, length: int) -> bytes:
+    def _read_local_placeholder(self, cid: bytes, cluster_id: int,
+                                length: int) -> bytes:
         """Local-cache hit: the device already holds the chunk.
 
         The simulator does not persist device caches, so rebuild the chunk
-        from SEARS (time is *not* charged -- it was a cache hit)."""
-        info = self.index.get(cid)
-        pieces = self.clusters[info.cluster_id].read_pieces(cid, self.k)
-        return self.code.decode_bytes(pieces, info.length)
+        from SEARS with the owning cluster's code (time is *not* charged
+        -- it was a cache hit)."""
+        cluster = self.clusters[cluster_id]
+        pieces = cluster.read_pieces(cid, cluster.k)
+        return cluster.code.decode_bytes(pieces, length)
 
-    # ------------------------------------------------------------------
+    # ------------------------------------------------------------ delete ---
     def delete_file(self, user: str, filename: str) -> None:
+        """Delete one file: a one-request flush of the DELETE machinery.
+
+        Deletes submitted through a scheduler (``submit_delete``)
+        serialize with queued puts/gets in submission order; this direct
+        call is the batch-of-one special case, exactly like ``put_file``.
+        """
+        from repro.core.scheduler import DELETE, Request
+        req = Request(request_id=0, user=user, kind=DELETE,
+                      filenames=[filename])
+        self._batch_delete([req])
+        self._one_request(req)
+
+    def _batch_delete(self, requests) -> None:
+        """Shared delete window: apply each request's deletes in order.
+
+        Deletion is pure control-plane work (refcounts, index records,
+        piece drops), so there is nothing to coalesce on the data plane
+        -- the window exists so deletes *serialize* with put/get windows
+        in submission order.  A missing file fails only its own request;
+        files already deleted by that point stay deleted (deletion is not
+        transactional across a request's filename list).
+        """
+        for req in requests:
+            deleted: list[str] = []
+            try:
+                for fn in req.filenames:
+                    self._delete_now(req.user, fn)
+                    deleted.append(fn)
+            except Exception as exc:
+                req.status, req.error = "failed", exc
+                continue
+            req.result = deleted
+            req.status = "done"
+
+    def _delete_now(self, user: str, filename: str) -> None:
+        """Immediate delete: drop meta, release refs, free garbage chunks."""
         sw = self._switch(user)
         meta = sw.drop_meta(filename)
-        self.logical_bytes -= meta.size
-        self.n_files -= 1
+        cls_name = (meta.storage_class if meta.storage_class in self._logical
+                    else self.default_class.name)
+        self._logical[cls_name] -= meta.size
+        self._nfiles[cls_name] -= 1
         seen: set[tuple[bytes, int]] = set()
         for cid, cluster_id in meta.entries:
             if (cid, cluster_id) in seen:
@@ -622,7 +847,11 @@ class SEARSStore:
         return self.repair.repair(cluster_ids=[cluster_id]).pieces_rebuilt
 
     def repair_all(self) -> RepairReport:
-        """Storm recovery: prioritized repair pass over every cluster."""
+        """Storm recovery: prioritized repair pass over every cluster.
+
+        Each chunk rebuilds with its *owning cluster's* ``(n, k)``, so a
+        mixed-class storm heals every pool with the right code.
+        """
         return self.repair.repair()
 
     # ------------------------------------------------------------------
@@ -630,8 +859,29 @@ class SEARSStore:
         piece_bytes = sum(c.used for c in self.clusters)
         index_bytes = self.index.index_bytes + sum(
             sw.meta_bytes for sw in self.switching.values())
+        # per-class slices: pool-level byte/chunk counts + exact
+        # per-class logical bytes, file counts and meta bytes
+        meta_by_class: dict[str, int] = {name: 0 for name in self.classes}
+        for sw in self.switching.values():
+            for meta in sw.table.values():
+                if meta.storage_class in meta_by_class:
+                    meta_by_class[meta.storage_class] += meta.meta_bytes
+        per_class: dict[str, ClassStats] = {}
+        for name, cls in self.classes.items():
+            pool_ids = self.pools[cls.pool_tag]
+            pool_chunks = sum(len(self.index.cluster_chunks(i))
+                              for i in pool_ids)
+            per_class[name] = ClassStats(
+                name=name, n=cls.n, k=cls.k, n_clusters=len(pool_ids),
+                logical_bytes=self._logical[name],
+                piece_bytes=sum(self.clusters[i].used for i in pool_ids),
+                index_bytes=(dedup.CHUNK_RECORD_BYTES * pool_chunks
+                             + meta_by_class[name]),
+                n_files=self._nfiles[name],
+                n_unique_chunks=pool_chunks)
         return StoreStats(logical_bytes=self.logical_bytes,
                           piece_bytes=piece_bytes,
                           index_bytes=index_bytes,
                           n_unique_chunks=len(self.index),
-                          n_files=self.n_files)
+                          n_files=self.n_files,
+                          per_class=per_class)

@@ -221,6 +221,67 @@ def multi_user_get_trace(put_trace: list[tuple[str, list[tuple[str, bytes]]]]
 
 
 @dataclasses.dataclass(frozen=True)
+class MixedClassConfig:
+    """Trace shape for mixed real-time/archival traffic (storage classes).
+
+    Each user submits one *interactive* batch (many small hot files, the
+    real-time class) and one *cold* batch (few large backup-style blobs
+    with heavy day-over-day redundancy, the archival class), so a single
+    scheduler flush window carries both policies at once -- the workload
+    the per-class launch bucketing must amortize.
+    """
+
+    n_users: int = 4
+    hot_files_per_user: int = 3
+    hot_kb: int = 24
+    cold_files_per_user: int = 2
+    cold_kb: int = 96
+    cold_churn: float = 0.05  # fraction of a cold blob rewritten per file
+    shared_fraction: float = 0.35
+    block: int = 8 << 10
+    seed: int = 31
+
+
+def mixed_class_trace(cfg: MixedClassConfig
+                      ) -> list[tuple[str, list[tuple[str, bytes]], str]]:
+    """Per-user (user, files, storage_class) request trace.
+
+    Deterministic in ``cfg.seed``.  Hot files mix private and shared-pool
+    blocks (dedup *within* the real-time pool); cold files are per-user
+    backup images that change only ``cold_churn`` of their bytes file to
+    file (heavy redundancy for the archival pool's global-dedup CLB
+    binding to exploit).  Request order interleaves classes so any flush
+    window over the trace is mixed.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pool = _BlockPool(rng, cfg.block, count=256)
+    trace: list[tuple[str, list[tuple[str, bytes]], str]] = []
+    for u in range(cfg.n_users):
+        user = f"user{u}"
+        hot = [(f"u{u}/hot{f}",
+                _mixed_bytes(cfg.seed * 7_919 + u * 1_009 + f,
+                             cfg.hot_kb << 10, pool,
+                             cfg.shared_fraction, cfg.block))
+               for f in range(cfg.hot_files_per_user)]
+        trace.append((user, hot, "realtime"))
+        r = np.random.default_rng(cfg.seed * 104_729 + u)
+        img = r.integers(0, 256, size=cfg.cold_kb << 10,
+                         dtype=np.int64).astype(np.uint8)
+        cold = []
+        for f in range(cfg.cold_files_per_user):
+            if f:
+                img = img.copy()
+                n_edit = max(1, int(img.size * cfg.cold_churn) // 2048)
+                for _ in range(n_edit):
+                    off = int(r.integers(0, max(1, img.size - 2048)))
+                    img[off:off + 2048] = r.integers(
+                        0, 256, 2048, dtype=np.int64).astype(np.uint8)
+            cold.append((f"u{u}/cold{f}", img.tobytes()))
+        trace.append((user, cold, "archival"))
+    return trace
+
+
+@dataclasses.dataclass(frozen=True)
 class StormConfig:
     """Shape of a seeded failure storm over an (n, k) multi-cluster store.
 

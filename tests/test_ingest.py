@@ -279,7 +279,7 @@ def test_interval_triggered_flush_uses_injected_clock():
     assert sched.poll() == []  # not yet expired
     now[0] = 5.5
     flushed = sched.poll()
-    assert flushed == [r1] and r1.ok
+    assert flushed == [r1.request] and r1.ok
     assert sched.stats.n_auto_flushes == 1
 
 

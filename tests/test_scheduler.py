@@ -93,7 +93,7 @@ def test_coalesced_equals_sequential_per_user(engine):
 
     # identical per-request stats, StoreStats, dedup ratio and placement
     for u, r in reqs.items():
-        assert r.result == seq_up[u]
+        assert r.done() and r.result() == seq_up[u]
     assert seq.stats() == coal.stats()
     assert seq.stats().dedup_ratio == coal.stats().dedup_ratio
     for c_seq, c_coal in zip(seq.clusters, coal.clusters):
@@ -109,7 +109,7 @@ def test_coalesced_equals_sequential_per_user(engine):
     for u, r in get_reqs.items():
         assert r.ok
         for (fn, blob), (o_seq, st_seq), (o_coal, st_coal) in zip(
-                files_by_user[u], seq_out[u], r.result):
+                files_by_user[u], seq_out[u], r.result()):
             assert o_coal == o_seq == blob
             assert (st_seq.n_fetched, st_seq.bytes_fetched,
                     st_seq.clusters_touched) == \
@@ -131,8 +131,8 @@ def test_coalesced_cross_user_dedup_under_clb():
     sched.flush()
     assert all(r.ok for r in reqs)
     # later requests dedup against the first request's chunks
-    assert sum(s.n_new_chunks for s in reqs[1].result) == 0
-    assert sum(s.n_new_chunks for s in reqs[2].result) == 0
+    assert sum(s.n_new_chunks for s in reqs[1].result()) == 0
+    assert sum(s.n_new_chunks for s in reqs[2].result()) == 0
     assert seq.stats() == coal.stats()
 
 
@@ -212,9 +212,11 @@ def test_bad_rho_fn_fails_only_its_request():
     good = sched.submit_get("alice", ["a"])
     bad = sched.submit_get("bob", ["b"], rho_fn=boom)
     sched.flush()
-    assert good.ok and good.result[0][0] == blob
+    assert good.ok and good.result()[0][0] == blob
     assert bad.status == "failed"
     assert isinstance(bad.error, RuntimeError)
+    with pytest.raises(RuntimeError, match="bad rho"):
+        bad.result()  # the future re-raises the request's error
 
 
 def test_get_failure_isolated_to_one_request():
@@ -226,7 +228,7 @@ def test_get_failure_isolated_to_one_request():
     good = sched.submit_get("alice", ["a"])
     missing = sched.submit_get("bob", ["nope"])
     sched.flush()
-    assert good.ok and good.result[0][0] == blob
+    assert good.ok and good.result()[0][0] == blob
     assert missing.status == "failed"
     assert isinstance(missing.error, KeyError)
 
@@ -248,7 +250,7 @@ def test_data_loss_poisons_only_owning_request():
     sched.flush()
     assert r_alice.status == "failed"
     assert isinstance(r_alice.error, ValueError)
-    assert r_bob.ok and r_bob.result[0][0] == blob_b
+    assert r_bob.ok and r_bob.result()[0][0] == blob_b
 
 
 def test_write_failure_rolls_back_owner_and_dedup_dependents():
@@ -285,7 +287,8 @@ def test_mixed_window_put_then_get_same_flush():
     sched = s.scheduler()
     p = sched.submit_put("alice", [("f", blob)])
     g = sched.submit_get("alice", ["f"])
+    assert not p.done() and not g.done()
     sched.flush()
     assert p.ok and g.ok
-    assert g.result[0][0] == blob
+    assert g.result()[0][0] == blob
     assert sched.stats.n_put_windows == 1 and sched.stats.n_get_windows == 1
