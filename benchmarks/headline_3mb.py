@@ -77,7 +77,7 @@ def check(rows: list[dict]) -> list[str]:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--engine", choices=("numpy", "kernel"),
+    ap.add_argument("--engine", choices=("numpy", "kernel", "fused"),
                     default="numpy", help="data-plane coding engine")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()

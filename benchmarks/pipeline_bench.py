@@ -28,7 +28,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import make_store
+from benchmarks.common import make_store, warm_start
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _OUT = os.path.join(_ROOT, "BENCH_pipeline.json")
@@ -45,6 +45,12 @@ def _workload(n_files: int, file_kb: int, dup_every: int = 3):
         ).astype(np.uint8).tobytes()
         files.append((f"f{i}", blob))
     return files
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def _measure(engine: str, batched: bool, files) -> dict:
@@ -122,11 +128,6 @@ def _measure_ingest_phases(engine: str, files) -> dict:
         t = min(_timed(fn) for _ in range(REPS))
         return out, t
 
-    def _timed(fn):
-        t0 = time.perf_counter()
-        fn()
-        return time.perf_counter() - t0
-
     # chunk: one engine window pass, vs the per-file host oracle (both
     # sides min-of-REPS on warm passes)
     per_file_spans = [chunker.chunk_spans(b) for b in blobs]
@@ -153,29 +154,165 @@ def _measure_ingest_phases(engine: str, files) -> dict:
     # no-op), so each timed pass lands on a fresh cluster
     t_write = min(_timed(lambda: Cluster(0, store.n, 1 << 30).store_chunks(
         items, min_pieces=store.k)) for _ in range(REPS))
-    return {"engine": engine, "files": len(files),
-            "total_mb": round(total_mb, 2), "n_chunks": len(chunks),
-            "chunk_s": round(t_chunk, 4),
-            "chunk_MBps": round(total_mb / t_chunk, 2),
-            "per_file_chunk_s": round(t_per_file, 4),
-            "per_file_chunk_MBps": round(total_mb / t_per_file, 2),
-            "chunk_speedup_vs_per_file": round(t_per_file / t_chunk, 2),
-            "gear_launches_per_window": gear,
-            "gear_retraces_steady_window": retraces_warm,
-            "hash_s": round(t_hash, 4),
-            "encode_s": round(t_encode, 4),
-            "write_s": round(t_write, 4)}
+    out = {"engine": engine, "files": len(files),
+           "total_mb": round(total_mb, 2), "n_chunks": len(chunks),
+           "chunk_s": round(t_chunk, 4),
+           "chunk_MBps": round(total_mb / t_chunk, 2),
+           "per_file_chunk_s": round(t_per_file, 4),
+           "per_file_chunk_MBps": round(total_mb / t_per_file, 2),
+           "chunk_speedup_vs_per_file": round(t_per_file / t_chunk, 2),
+           "gear_launches_per_window": gear,
+           "gear_retraces_steady_window": retraces_warm,
+           "hash_s": round(t_hash, 4),
+           "encode_s": round(t_encode, 4),
+           "write_s": round(t_write, 4)}
+    if getattr(eng, "supports_fused_ingest", False):
+        # fused single-residency hash+encode vs the staged sum above;
+        # count launches and steady-state retraces over the timed passes
+        jobs = [(code, c) for c in chunks]
+        eng.hash_encode_blobs_multi(jobs)  # warmup
+        l1, tr1 = LAUNCHES.snapshot(), TRACES.snapshot()
+        t_fused = None
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            fused_ids, fused_pieces = eng.hash_encode_blobs_multi(jobs)
+            dt = time.perf_counter() - t0
+            t_fused = dt if t_fused is None else min(t_fused, dt)
+        assert (fused_ids, fused_pieces) == (ids, pieces), \
+            f"{engine}: fused ingest diverged from staged"
+        out["fused_s"] = round(t_fused, 4)
+        out["fused_launches_per_window"] = LAUNCHES.delta(l1).fused // REPS
+        out["fused_retraces_steady_window"] = TRACES.delta(tr1).fused
+        out["staged_hash_encode_s"] = round(t_hash + t_encode, 4)
+    return out
+
+
+def _measure_overlap(engine: str, quick: bool = True) -> dict:
+    """Double-buffered vs sequential window pipeline (put and get).
+
+    Ingest: a streaming multi-window trace runs once with back-to-back
+    ``_batch_put`` windows and once through ``put_windows_pipelined``
+    (window i+1's device chunk pass issued under window i's host
+    phases).  The device phase is the summed blocking chunk-pass time,
+    the host phase is the sequential remainder; with real overlap the
+    pipelined wall must stay near ``max(host, device)``.  Retrieval is
+    measured degraded (every chunk takes a GF decode launch) with
+    ``get_files`` vs the prefetched ``get_files_pipelined``.  All
+    timings are min-of-REPS on warm jit caches; puts land on a fresh
+    store per pass (stateful), gets reuse one store.
+    """
+    from repro.core.scheduler import PUT, Request
+    from repro.core.workload import StreamingConfig, streaming_window_trace
+
+    cfg = StreamingConfig(n_windows=4 if quick else 8,
+                          file_kb=64 if quick else 256)
+    windows = list(streaming_window_trace(cfg))
+    total_mb = sum(len(b) for w in windows
+                   for _, fs in w for _, b in fs) / 2**20
+    REPS = 3
+
+    def fresh():
+        return make_store("ulb", clusters=4, engine=engine)
+
+    def seq_put(store):
+        for batch in windows:
+            reqs = [Request(request_id=i, user=u, kind=PUT, files=list(fs))
+                    for i, (u, fs) in enumerate(batch)]
+            store._batch_put(reqs)
+            for r in reqs:
+                assert r.ok, f"overlap/{engine}: put failed: {r.error}"
+
+    def best_of(put_fn):
+        t = None
+        for _ in range(REPS):
+            store = fresh()
+            t0 = time.perf_counter()
+            put_fn(store)
+            dt = time.perf_counter() - t0
+            t = dt if t is None else min(t, dt)
+        return t
+
+    seq_put(fresh())  # warmup (jit compile window shapes)
+    store = fresh()
+    store.put_windows_pipelined(windows)
+    t_seq = best_of(seq_put)
+    t_pipe = best_of(lambda s: s.put_windows_pipelined(windows))
+
+    # device phase: the blocking chunk pass per window (the work begin
+    # issues ahead); host phase: everything else the sequential path does
+    eng, chunker = store.engine, store.chunker
+    window_jobs = [[(chunker, b) for _, fs in w for _, b in fs]
+                   for w in windows]
+    t_dev = min(_timed(lambda: [eng.chunk_blobs_multi(jobs)
+                                for jobs in window_jobs])
+                for _ in range(REPS))
+    t_host = max(0.0, t_seq - t_dev)
+
+    # degraded retrieval: every chunk decodes through the GF matmul
+    for c in store.clusters:
+        c.kill_nodes([0, 2, 4, 6, 8])
+    user = "user0"
+    names = [fn for w in windows for u, fs in w if u == user
+             for fn, _ in fs]
+    blob_by_name = {fn: b for w in windows for u, fs in w if u == user
+                    for fn, b in fs}
+    store.get_files(user, names)  # warmup
+    t_get_seq = min(_timed(lambda: store.get_files(user, names))
+                    for _ in range(REPS))
+    outs = None
+
+    def pipe_get():
+        nonlocal outs
+        outs = store.get_files_pipelined(user, names,
+                                         window_files=cfg.files_per_user)
+
+    t_get_pipe = min(_timed(pipe_get) for _ in range(REPS))
+    for fn, (blob, _) in zip(names, outs):
+        assert blob == blob_by_name[fn], f"overlap/{engine}: {fn} corrupted"
+
+    # decode device phase: the same unique jobs the window decode issues
+    plans = [store._plan_get(user, fn, None) for fn in names]
+    tasks = [t for p in plans for t in p.fetch_tasks]
+    by_cluster = {}
+    for t in tasks:
+        by_cluster.setdefault(t.cluster_id, []).append(t)
+    for cid, ctasks in by_cluster.items():
+        got = store.clusters[cid].read_pieces_batch(
+            [t.chunk_id for t in ctasks], store.clusters[cid].k)
+        for t in ctasks:
+            t.pieces = got[t.chunk_id]
+    uniq = {}
+    for t in tasks:
+        uniq.setdefault((t.chunk_id, t.cluster_id), t)
+    jobs = [(store.clusters[t.cluster_id].code, t.pieces, t.length)
+            for t in uniq.values()]
+    t_get_dev = min(_timed(lambda: eng.decode_blobs_multi(jobs))
+                    for _ in range(REPS))
+    t_get_host = max(0.0, t_get_seq - t_get_dev)
+
+    return {"engine": engine, "windows": len(windows),
+            "total_mb": round(total_mb, 2),
+            "put_sequential_s": round(t_seq, 4),
+            "put_pipelined_s": round(t_pipe, 4),
+            "put_device_s": round(t_dev, 4),
+            "put_host_s": round(t_host, 4),
+            "get_files": len(names),
+            "get_sequential_s": round(t_get_seq, 4),
+            "get_pipelined_s": round(t_get_pipe, 4),
+            "get_device_s": round(t_get_dev, 4),
+            "get_host_s": round(t_get_host, 4)}
 
 
 def run(quick: bool = True, engine: str | None = None) -> list[dict]:
     files = _workload(n_files=6 if quick else 24,
                       file_kb=96 if quick else 512)
-    variants = [("numpy", False), ("kernel", True)]
+    variants = [("numpy", False), ("kernel", True), ("fused", True)]
     if engine:  # --engine narrows to one data plane (both modes)
         variants = [(engine, False), (engine, True)]
     results = []
     for eng, batched in variants:
-        _measure(eng, batched, files)  # untimed warmup (jit compile)
+        warm_start(eng)  # compile the common launch shapes untimed
+        _measure(eng, batched, files)  # untimed warmup (window shapes)
         results.append(_measure(eng, batched, files))
 
     # the two paths must agree on everything the user can observe
@@ -183,19 +320,23 @@ def run(quick: bool = True, engine: str | None = None) -> list[dict]:
     for r in results[1:]:
         assert r["stats"] == s0, "engines diverged on StoreStats"
 
-    with open(_OUT, "w") as f:
-        json.dump({"workload": {"files": len(files),
-                                "total_mb": results[0]["total_mb"]},
-                   "results": results}, f, indent=1)
-
     # per-phase ingest breakdown (chunk / hash / encode / write) with
     # host-vs-device chunking -> BENCH_ingest.json
-    ingest_engines = [engine] if engine else ["numpy", "kernel"]
+    ingest_engines = [engine] if engine else ["numpy", "kernel", "fused"]
     ingest = [_measure_ingest_phases(eng, files) for eng in ingest_engines]
     with open(_OUT_INGEST, "w") as f:
         json.dump({"workload": {"files": len(files),
                                 "total_mb": results[0]["total_mb"]},
                    "phases": ingest}, f, indent=1)
+
+    # double-buffered window pipeline vs sequential windows -> appended
+    # to BENCH_pipeline.json
+    overlap_engines = [engine] if engine else ["kernel", "fused"]
+    overlap = [_measure_overlap(eng, quick=quick) for eng in overlap_engines]
+    with open(_OUT, "w") as f:
+        json.dump({"workload": {"files": len(files),
+                                "total_mb": results[0]["total_mb"]},
+                   "results": results, "overlap": overlap}, f, indent=1)
 
     rows = []
     for r in results:
@@ -203,13 +344,34 @@ def run(quick: bool = True, engine: str | None = None) -> list[dict]:
                      **{k: v for k, v in r.items() if k != "stats"}})
     for r in ingest:
         rows.append({"name": f"ingest-phases/{r['engine']}", **r})
+    for r in overlap:
+        rows.append({"name": f"overlap/{r['engine']}", **r})
     return rows
 
 
 def check(rows: list[dict]) -> list[str]:
     fails = []
     for r in rows:
+        if r["name"].startswith("overlap/"):
+            # overlap efficiency: with the chunk pass of window i+1 (resp.
+            # the decode of window i) genuinely in flight under the other
+            # phase, the pipelined wall must stay near max(host, device).
+            # Soft margins (1.2x + absolute slack) keep the gate honest on
+            # a noisy shared 2-core runner while still catching a pipeline
+            # that silently serializes (wall -> host + device).
+            for op in ("put", "get"):
+                bound = 1.2 * max(r[f"{op}_host_s"], r[f"{op}_device_s"])
+                if r[f"{op}_pipelined_s"] > bound + 0.1:
+                    fails.append(
+                        f"{r['name']}: {op} pipeline wall "
+                        f"{r[f'{op}_pipelined_s']}s exceeds 1.2x "
+                        f"max(host={r[f'{op}_host_s']}s, "
+                        f"device={r[f'{op}_device_s']}s)")
+            continue
         if r["name"].startswith("ingest-phases/"):
+            if r.get("fused_retraces_steady_window", 0) != 0:
+                fails.append(f"{r['name']}: fused ingest retraced on a "
+                             f"repeated window")
             if r["gear_retraces_steady_window"] != 0:
                 fails.append(f"{r['name']}: gear jit cache retraced on a "
                              f"repeated window")

@@ -10,10 +10,12 @@ from repro.core.store import SEARSStore
 
 
 def main() -> None:
-    # a 4-cluster SEARS deployment: one (n=10, k=5) ULB storage class
+    # a 4-cluster SEARS deployment: one (n=10, k=5) ULB storage class.
+    # engine="fused" runs put windows through the single-launch
+    # hash+encode mega-kernel (engine="numpy"/"kernel" are byte-identical).
     store = SEARSStore(
         classes=[StorageClass(name="default", n=10, k=5, binding="ulb")],
-        num_clusters=4, node_capacity=1 << 30)
+        num_clusters=4, node_capacity=1 << 30, engine="fused")
 
     rng = np.random.default_rng(0)
     report = rng.integers(0, 256, size=300_000, dtype=np.int64).astype(
@@ -30,13 +32,31 @@ def main() -> None:
     print(f"re-upload: {st2.n_new_chunks} new chunks, "
           f"{st2.bytes_uploaded} bytes sent (dedup)")
 
-    # --- half the storage nodes die; the file survives -------------------
-    cluster = next(c for c in store.clusters if c.used > 0)
-    cluster.kill_nodes([0, 2, 4, 6, 8])
+    # --- a streaming backlog: double-buffered put windows ----------------
+    backlog = [[("bob", [(f"batch{w}/part{i}",
+                          rng.integers(0, 256, size=60_000, dtype=np.int64)
+                          .astype(np.uint8).tobytes())
+                         for i in range(3)])]
+               for w in range(3)]
+    stats = store.put_windows_pipelined(backlog)
+    print(f"pipelined ingest: {len(stats)} windows, "
+          f"{sum(s.n_chunks for w in stats for s in w)} chunks "
+          f"(window i+1 chunks on device while window i plans on host)")
+
+    # --- half the storage nodes die; the files survive -------------------
+    for cluster in store.clusters:
+        cluster.kill_nodes([0, 2, 4, 6, 8])
     data, rst = store.get_file("alice", "report.doc")
     assert data == report
     print(f"retrieval with 5/10 nodes dead: OK, modeled {rst.time_s:.2f}s "
           f"({rst.n_fetched} chunks from {rst.clusters_touched} cluster)")
+
+    # --- prefetched multi-file get: next window reads+decodes early ------
+    names = [f"batch{w}/part{i}" for w in range(3) for i in range(3)]
+    results = store.get_files_pipelined("bob", names, window_files=3)
+    assert all(len(data) == 60_000 for data, _ in results)
+    print(f"pipelined degraded get: {len(results)} files OK, "
+          f"mean modeled {np.mean([r.time_s for _, r in results]):.2f}s")
 
     # --- storage accounting ------------------------------------------------
     s = store.stats()

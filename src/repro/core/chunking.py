@@ -174,39 +174,62 @@ def as_bytes_array(data) -> np.ndarray:
     return arr
 
 
-def chunk_spans_batch(chunker: Chunker, blobs: list[np.ndarray],
-                      stream_candidates_fn=gear_candidates_np
-                      ) -> list[list[tuple[int, int]]]:
-    """Batched ``chunk_spans``: one rolling-hash pass over a whole window.
+@dataclasses.dataclass
+class PendingSpans:
+    """An issued-but-unresolved batched chunking pass (window in flight).
 
-    All blobs are concatenated into one stream and boundary-candidate
-    positions are extracted with a single ``stream_candidates_fn(stream,
-    mask)`` call (``gear_candidates_np`` on the host, or one device gear
-    launch via ``kernels.ops.gear_candidate_positions``).  Per-file
-    boundary candidates come from the shared stream with offset masking:
+    Produced by ``chunk_spans_batch_begin``: the window's stream is
+    concatenated and its candidate pass *issued* (one device gear launch
+    on the kernel path); ``handle`` is whatever the issue function
+    returned -- an unmaterialized device bitmap, or a deferred host
+    closure.  ``chunk_spans_batch_finish`` resolves it to spans.
+    """
 
-    * a stream position at local offset >= WINDOW-1 sees a hash window
-      that lies entirely inside its own file, so its hash value equals
-      the per-file oracle's exactly;
-    * the first WINDOW-1 positions of each file are contaminated by the
-      previous file's tail bytes, so their candidates are recomputed from
-      the file's own head (``gear_hash_np`` over <= 31 bytes) -- the
-      per-file history reset the oracle gets implicitly.
+    chunker: Chunker
+    lengths: np.ndarray
+    starts: np.ndarray
+    stream: np.ndarray | None  # None for an all-empty window
+    handle: object
 
-    The greedy min/max selection stays per file on the sparse candidate
-    list, so the returned spans are byte-identical to
-    ``chunker.chunk_spans`` on every blob (the differential tests in
-    ``tests/test_ingest.py`` enforce this).
+
+def chunk_spans_batch_begin(chunker: Chunker, blobs: list[np.ndarray],
+                            issue_fn) -> PendingSpans:
+    """Issue the window's candidate pass without resolving it.
+
+    ``issue_fn(stream, mask)`` dispatches the rolling-hash work and may
+    return an unmaterialized handle (e.g. an in-flight device fire
+    bitmap via ``kernels.ops.gear_fire_issue``); the host-side greedy
+    selection happens at ``chunk_spans_batch_finish``.  This is the
+    double-buffering seam: window *i+1*'s gear launch runs while window
+    *i*'s host phases (selection, dedup planning) execute.
     """
     blobs = [as_bytes_array(b) for b in blobs]
     lengths = np.array([b.shape[0] for b in blobs], dtype=np.int64)
-    n_total = int(lengths.sum())
-    if n_total == 0:
-        return [[] for _ in blobs]
+    if int(lengths.sum()) == 0:
+        return PendingSpans(chunker=chunker, lengths=lengths,
+                            starts=np.zeros_like(lengths), stream=None,
+                            handle=None)
     starts = np.concatenate([[0], np.cumsum(lengths)[:-1]])
     stream = np.concatenate([b for b in blobs if b.shape[0]])
+    return PendingSpans(chunker=chunker, lengths=lengths, starts=starts,
+                        stream=stream,
+                        handle=issue_fn(stream, chunker.mask))
 
-    fire = np.asarray(stream_candidates_fn(stream, chunker.mask),
+
+def chunk_spans_batch_finish(pending: PendingSpans, resolve_fn
+                             ) -> list[list[tuple[int, int]]]:
+    """Resolve an issued window to per-blob spans (greedy select on host).
+
+    ``resolve_fn(handle)`` materializes the candidate positions (sorted
+    global stream offsets); the per-file seam masking and greedy min/max
+    selection below are byte-identical to ``chunk_spans_batch``.
+    """
+    chunker, lengths = pending.chunker, pending.lengths
+    if pending.stream is None:
+        return [[] for _ in lengths]
+    starts, stream = pending.starts, pending.stream
+
+    fire = np.asarray(resolve_fn(pending.handle),
                       dtype=np.int64)  # sorted global positions
 
     halo = WINDOW - 1
@@ -239,6 +262,38 @@ def chunk_spans_batch(chunker: Chunker, blobs: list[np.ndarray],
             prev = int(c)
         spans.append(out)
     return spans
+
+
+def chunk_spans_batch(chunker: Chunker, blobs: list[np.ndarray],
+                      stream_candidates_fn=gear_candidates_np
+                      ) -> list[list[tuple[int, int]]]:
+    """Batched ``chunk_spans``: one rolling-hash pass over a whole window.
+
+    All blobs are concatenated into one stream and boundary-candidate
+    positions are extracted with a single ``stream_candidates_fn(stream,
+    mask)`` call (``gear_candidates_np`` on the host, or one device gear
+    launch via ``kernels.ops.gear_candidate_positions``).  Per-file
+    boundary candidates come from the shared stream with offset masking:
+
+    * a stream position at local offset >= WINDOW-1 sees a hash window
+      that lies entirely inside its own file, so its hash value equals
+      the per-file oracle's exactly;
+    * the first WINDOW-1 positions of each file are contaminated by the
+      previous file's tail bytes, so their candidates are recomputed from
+      the file's own head (``gear_hash_np`` over <= 31 bytes) -- the
+      per-file history reset the oracle gets implicitly.
+
+    The greedy min/max selection stays per file on the sparse candidate
+    list, so the returned spans are byte-identical to
+    ``chunker.chunk_spans`` on every blob (the differential tests in
+    ``tests/test_ingest.py`` enforce this).
+
+    Implemented as ``begin`` + ``finish`` with an eager issue function
+    and identity resolve; the split entry points exist for the
+    double-buffered window pipeline.
+    """
+    pending = chunk_spans_batch_begin(chunker, blobs, stream_candidates_fn)
+    return chunk_spans_batch_finish(pending, lambda handle: handle)
 
 
 def select_boundaries(cand: np.ndarray, n: int, min_size: int,

@@ -129,6 +129,79 @@ class CodingEngine(abc.ABC):
         pieces = [p for _, p in paired]
         return blobs, pieces
 
+    # -- fused ingest seam -------------------------------------------------
+    # ``supports_fused_ingest`` advertises a hash+encode path that keeps
+    # each chunk resident on the device for both passes (one launch per
+    # bucket instead of separate SHA-1 and GF dispatches).  The staged
+    # default below is the semantic contract the fused override must
+    # match byte-for-byte (differential-tested in tests/test_ingest.py).
+
+    supports_fused_ingest: bool = False
+
+    def hash_encode_blobs_multi(self, jobs: list[tuple[RSCode, bytes]]
+                                ) -> tuple[list[bytes], list[list[bytes]]]:
+        """Chunk ids + RS pieces for (code, blob) jobs, input order.
+
+        Staged reference semantics: hash everything, then encode
+        everything.  ``FusedEngine`` overrides this with the single-
+        residency fused path.
+        """
+        ids = self.hash_chunks([blob for _, blob in jobs])
+        return ids, self.encode_blobs_multi(jobs)
+
+    # -- begin/finish splits: the double-buffering seam --------------------
+    # ``*_begin`` issues a window's device work (or defers host work) and
+    # returns an opaque token; ``*_finish`` materializes results.  The
+    # base defaults defer everything to finish time -- correct for any
+    # engine -- so the pipelined store paths work unchanged on
+    # ``NumpyEngine``; ``KernelEngine`` overrides them to genuinely issue
+    # launches ahead (JAX async dispatch), which is where the overlap
+    # comes from.
+
+    def chunk_blobs_begin(self, chunker: Chunker, blobs: list[bytes]):
+        """Stage a window's CDC pass; resolve with ``chunk_blobs_finish``."""
+        return (chunker, blobs)
+
+    def chunk_blobs_finish(self, pending) -> list[list[tuple[int, int]]]:
+        return self.chunk_blobs(*pending)
+
+    def chunk_blobs_multi_begin(self, jobs: list[tuple[Chunker, bytes]]):
+        """Stage a mixed-chunker window; resolve with the finish twin."""
+        return jobs
+
+    def chunk_blobs_multi_finish(self, token) -> list[list[tuple[int, int]]]:
+        return self.chunk_blobs_multi(token)
+
+    def decode_blobs_multi_begin(
+            self, jobs: list[tuple[RSCode, dict[int, bytes], int]]):
+        """Stage a decode window; resolve with ``decode_blobs_multi_finish``."""
+        return jobs
+
+    def decode_blobs_multi_finish(self, token) -> list[bytes]:
+        return self.decode_blobs_multi(token)
+
+    def _by_policy_begin(self, jobs: list[tuple], begin_fn):
+        """Begin-side half of ``_by_policy``: group by policy, issue one
+        ``begin_fn(policy, payload)`` per group, keep the scatter plan."""
+        groups: dict = {}
+        for i, job in enumerate(jobs):
+            groups.setdefault(job[0], []).append(i)
+        started = []
+        for policy, idxs in groups.items():
+            payload = [jobs[i][1] if len(jobs[i]) == 2 else jobs[i][1:]
+                       for i in idxs]
+            started.append((idxs, begin_fn(policy, payload)))
+        return (len(jobs), started)
+
+    def _by_policy_finish(self, token, finish_fn) -> list:
+        """Finish-side half: resolve each group and scatter to input order."""
+        n, started = token
+        out: list = [None] * n
+        for idxs, pending in started:
+            for i, res in zip(idxs, finish_fn(pending)):
+                out[i] = res
+        return out
+
 
 class NumpyEngine(CodingEngine):
     """Per-chunk host path: hashlib + one numpy GF matmul per chunk."""
@@ -187,14 +260,43 @@ class KernelEngine(CodingEngine):
         self.max_hash_len = max_hash_len
         self.hash_batch = hash_batch or self.HASH_BATCH
 
+    def chunk_blobs_begin(self, chunker: Chunker, blobs: list[bytes]):
+        """Issue the window's gear launch; the bitmap stays on device."""
+        from repro.kernels import ops
+        return chunking.chunk_spans_batch_begin(
+            chunker, blobs,
+            lambda stream, mask: ops.gear_fire_issue(
+                stream, mask, impl=self.impl))
+
+    def chunk_blobs_finish(self, pending) -> list[list[tuple[int, int]]]:
+        """Block on the fire bitmap; greedy selection on host."""
+        from repro.kernels import ops
+        return chunking.chunk_spans_batch_finish(
+            pending, ops.gear_fire_resolve)
+
     def chunk_blobs(self, chunker: Chunker,
                     blobs: list[bytes]) -> list[list[tuple[int, int]]]:
         """One device gear launch per window; greedy selection on host."""
+        return self.chunk_blobs_finish(self.chunk_blobs_begin(chunker, blobs))
+
+    def chunk_blobs_multi_begin(self, jobs: list[tuple[Chunker, bytes]]):
+        """Issue one gear launch per distinct chunker, all in flight."""
+        return self._by_policy_begin(jobs, self.chunk_blobs_begin)
+
+    def chunk_blobs_multi_finish(self, token) -> list[list[tuple[int, int]]]:
+        return self._by_policy_finish(token, self.chunk_blobs_finish)
+
+    def decode_blobs_multi_begin(
+            self, jobs: list[tuple[RSCode, dict[int, bytes], int]]):
+        """Issue decode launches per code; arrays stay unmaterialized."""
         from repro.kernels import ops
-        return chunking.chunk_spans_batch(
-            chunker, blobs,
-            lambda stream, mask: ops.gear_candidate_positions(
-                stream, mask, impl=self.impl))
+        return self._by_policy_begin(
+            jobs, lambda code, group: ops.rs_decode_blobs_begin(
+                code, group, impl=self.impl))
+
+    def decode_blobs_multi_finish(self, token) -> list[bytes]:
+        from repro.kernels import ops
+        return self._by_policy_finish(token, ops.rs_decode_blobs_finish)
 
     def hash_chunks(self, chunks: list[bytes]) -> list[bytes]:
         if self.hash_fn is not hashing.chunk_id:
@@ -214,7 +316,14 @@ class KernelEngine(CodingEngine):
                 batch_pos.append(i)
         for i in range(0, len(batch), self.hash_batch):
             group = batch[i: i + self.hash_batch]
-            pad = self.hash_batch - len(group)
+            # pad the batch axis to the next power of two (clamped to
+            # hash_batch): a steady-state window of tens of chunks no
+            # longer drags hash_batch-wide dead lanes through the
+            # compression loop, and the compiled-shape set stays bounded
+            # ({1, 2, 4, ..., hash_batch} x bucketed block widths)
+            target = min(1 << max(0, len(group) - 1).bit_length(),
+                         self.hash_batch)
+            pad = target - len(group)
             blocks, counts = hashing.sha1_pad_batch(
                 group + [b""] * pad, max_len=self.max_hash_len)
             words = ops.sha1_digest_words(blocks, counts, impl=self.impl)
@@ -234,14 +343,68 @@ class KernelEngine(CodingEngine):
         return ops.rs_decode_blobs(code, jobs, impl=self.impl)
 
 
+class FusedEngine(KernelEngine):
+    """KernelEngine plus the fused single-residency ingest path.
+
+    Inherits all batched entry points; ``hash_encode_blobs_multi`` is
+    replaced by the fused SHA-1 + GF-encode dispatch
+    (``kernels.ops.fused_hash_encode_blobs``): each chunk is packed into
+    device-resident (B, k, L) form once and both passes run inside one
+    jitted launch per piece-length bucket, so a put window costs
+    1 gear + O(piece-length buckets) launches instead of
+    1 gear + 1 SHA-1 + O(length buckets) GF.  Encoding is speculative --
+    every unique chunk of the window is encoded before the dedup lookup
+    decides whether its pieces are needed -- which trades a few wasted
+    device FLOPs for the removed round-trip.  Byte-identical to the
+    staged path (differential-tested), and the store falls back to
+    staged ``hash_chunks`` + ``encode_blobs_multi`` automatically when
+    ``supports_fused_ingest`` is false (custom ``hash_fn``).
+    """
+
+    name = "fused"
+
+    @property
+    def supports_fused_ingest(self) -> bool:  # type: ignore[override]
+        # the fused kernel computes SHA-1; a custom id function has no
+        # device twin, so the store must take the staged fallback
+        return self.hash_fn is hashing.chunk_id
+
+    def hash_encode_blobs_multi(self, jobs: list[tuple[RSCode, bytes]]
+                                ) -> tuple[list[bytes], list[list[bytes]]]:
+        if not self.supports_fused_ingest:
+            return super().hash_encode_blobs_multi(jobs)
+        from repro.kernels import ops
+        ids: list = [None] * len(jobs)
+        pieces: list = [None] * len(jobs)
+        # intra-window duplicates (same code, same bytes) cost one lane;
+        # RSCode is a frozen dataclass, so value-equal codes coalesce
+        rep: dict = {}
+        for i, (code, blob) in enumerate(jobs):
+            rep.setdefault((code, blob), i)
+        groups: dict = {}
+        for (code, _), i in rep.items():
+            groups.setdefault(code, []).append(i)
+        for code, idxs in groups.items():
+            gids, gpieces = ops.fused_hash_encode_blobs(
+                code, [jobs[i][1] for i in idxs], impl=self.impl)
+            for i, cid, ps in zip(idxs, gids, gpieces):
+                ids[i], pieces[i] = cid, ps
+        for i, (code, blob) in enumerate(jobs):
+            if ids[i] is None:
+                j = rep[(code, blob)]
+                ids[i], pieces[i] = ids[j], pieces[j]
+        return ids, pieces
+
+
 def make_engine(spec, hash_fn=hashing.chunk_id) -> CodingEngine:
     """Resolve an engine spec to a ``CodingEngine``.
 
     Accepted specs: a ``CodingEngine`` instance, ``'numpy'`` (per-chunk
     host path), ``'kernel'`` (batched; backend-aware -- Pallas kernels on
-    TPU, jitted ``'ref'`` oracles elsewhere), or the explicit overrides
-    ``'ref'`` / ``'pallas'`` that pin the batched implementation
-    regardless of backend.
+    TPU, jitted ``'ref'`` oracles elsewhere), ``'fused'`` (kernel
+    batching plus the fused single-residency hash+encode ingest), or the
+    explicit overrides ``'ref'`` / ``'pallas'`` that pin the batched
+    implementation regardless of backend.
     """
     if isinstance(spec, CodingEngine):
         return spec
@@ -249,6 +412,8 @@ def make_engine(spec, hash_fn=hashing.chunk_id) -> CodingEngine:
         return NumpyEngine(hash_fn)
     if spec == "kernel":
         return KernelEngine(hash_fn)  # impl resolved from backend
+    if spec == "fused":
+        return FusedEngine(hash_fn)  # impl resolved from backend
     if spec == "ref":
         return KernelEngine(hash_fn, impl="ref")
     if spec == "pallas":

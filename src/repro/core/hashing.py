@@ -50,10 +50,16 @@ def sha1_pad_batch(chunks: list[bytes], max_len: int | None = None
     ignored by the compression loop).
 
     ``max_len`` (message bytes) is an *authoritative* cap on the block
-    axis: the output is always exactly ``blocks_for(max_len)`` blocks wide
-    so callers get one fixed compiled launch shape, and a chunk that would
-    not fit raises ``ValueError`` instead of silently widening the shape
-    (callers route such chunks to a host hash fallback).
+    axis: a chunk that would not fit raises ``ValueError`` instead of
+    silently widening the compiled launch shape (callers route such
+    chunks to a host hash fallback).  Under the cap the block axis is
+    *bucketed* -- padded to the next power of two of the batch's own
+    need, clamped to the cap -- so callers see a bounded set of compiled
+    shapes ({1, 2, 4, ..., cap} blocks) instead of always paying the
+    worst-case width.  A window of 4 KB-average chunks used to drag a
+    129-block (8 KB-cap) message schedule through the compression loop
+    for every lane; bucketing cuts that steady-state overhead without
+    reopening the per-window retrace bug the fixed cap solved.
     """
     padded = [sha1_pad_blocks(c) for c in chunks]
     counts = np.array([p.shape[0] for p in padded], dtype=np.int32)
@@ -64,7 +70,7 @@ def sha1_pad_batch(chunks: list[bytes], max_len: int | None = None
             raise ValueError(
                 f"chunk needs {cap} SHA-1 blocks > fixed cap {fixed} "
                 f"(max_len={max_len}); hash oversized chunks on the host")
-        cap = fixed
+        cap = min(1 << (cap - 1).bit_length(), fixed)
     out = np.zeros((len(chunks), cap, 16), dtype=np.uint32)
     for i, p in enumerate(padded):
         out[i, : p.shape[0]] = p

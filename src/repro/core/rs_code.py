@@ -142,6 +142,61 @@ def batch_encode_blobs(code: "RSCode", blobs: list[bytes], apply_fn,
     return out  # type: ignore[return-value]
 
 
+def batch_decode_blobs_begin(code: "RSCode",
+                             jobs: list[tuple[dict[int, bytes], int]],
+                             apply_fn, quantum: int = 1,
+                             pad_batch=lambda b: b):
+    """Issue the decode batches for (piece_map, nbytes) jobs, unmaterialized.
+
+    Does everything ``batch_decode_blobs`` does up to -- and including --
+    dispatching one ``apply_fn`` call per (index set, padded length)
+    bucket, but does *not* materialize the results: with a jitted
+    ``apply_fn`` the returned state holds in-flight device arrays (JAX
+    async dispatch), so the caller can overlap host work with the GF
+    decode.  Systematic arrivals are reassembled host-side immediately
+    (the paper's memcpy fast path needs no launch).  Validation errors
+    (too few pieces, shape mismatch) raise here, never at finish.
+    """
+    out: list[bytes | None] = [None] * len(jobs)
+    piece_lens: list[int] = []
+    nbytes_list: list[int] = []
+    buckets: dict[tuple[tuple[int, ...], int], list[int]] = {}
+    systematic = tuple(range(code.k))
+    for i, (pieces, nbytes) in enumerate(jobs):
+        if len(pieces) < code.k:
+            raise ValueError(
+                f"need >= k={code.k} pieces to decode, got {len(pieces)}")
+        idx = tuple(sorted(pieces)[: code.k])
+        L = code.piece_len(nbytes)
+        piece_lens.append(L)
+        nbytes_list.append(nbytes)
+        if idx == systematic:
+            if any(len(pieces[j]) != L for j in idx):
+                raise ValueError(f"piece shape mismatch: want piece_len {L}")
+            out[i] = b"".join(pieces[j] for j in idx)[:nbytes]
+            continue
+        buckets.setdefault((idx, padded_piece_len(L, quantum)), []).append(i)
+    launched = []
+    for (idx, Lp), idxs in buckets.items():
+        arr = np.zeros((pad_batch(len(idxs)), code.k, Lp), dtype=np.uint8)
+        for row, i in enumerate(idxs):
+            arr[row] = pack_pieces(jobs[i][0], idx, piece_lens[i], Lp)
+        M = decode_matrix(code.n, code.k, idx)
+        launched.append((apply_fn(M, arr), idxs))  # (Bp, k, Lp) in flight
+    return out, launched, piece_lens, nbytes_list
+
+
+def batch_decode_blobs_finish(state) -> list[bytes]:
+    """Materialize a ``batch_decode_blobs_begin`` state -> decoded blobs."""
+    out, launched, piece_lens, nbytes_list = state
+    for dec, idxs in launched:
+        dec = np.asarray(dec)  # blocks on the in-flight launch
+        for row, i in enumerate(idxs):
+            L, nbytes = piece_lens[i], nbytes_list[i]
+            out[i] = dec[row, :, :L].reshape(-1)[:nbytes].tobytes()
+    return out  # type: ignore[return-value]
+
+
 def batch_decode_blobs(code: "RSCode",
                        jobs: list[tuple[dict[int, bytes], int]], apply_fn,
                        quantum: int = 1,
@@ -152,33 +207,8 @@ def batch_decode_blobs(code: "RSCode",
     systematic arrivals -- the k data pieces came first -- are
     reassembled host-side (the paper's memcpy fast path).
     """
-    out: list[bytes | None] = [None] * len(jobs)
-    piece_lens: list[int] = []
-    buckets: dict[tuple[tuple[int, ...], int], list[int]] = {}
-    systematic = tuple(range(code.k))
-    for i, (pieces, nbytes) in enumerate(jobs):
-        if len(pieces) < code.k:
-            raise ValueError(
-                f"need >= k={code.k} pieces to decode, got {len(pieces)}")
-        idx = tuple(sorted(pieces)[: code.k])
-        L = code.piece_len(nbytes)
-        piece_lens.append(L)
-        if idx == systematic:
-            if any(len(pieces[j]) != L for j in idx):
-                raise ValueError(f"piece shape mismatch: want piece_len {L}")
-            out[i] = b"".join(pieces[j] for j in idx)[:nbytes]
-            continue
-        buckets.setdefault((idx, padded_piece_len(L, quantum)), []).append(i)
-    for (idx, Lp), idxs in buckets.items():
-        arr = np.zeros((pad_batch(len(idxs)), code.k, Lp), dtype=np.uint8)
-        for row, i in enumerate(idxs):
-            arr[row] = pack_pieces(jobs[i][0], idx, piece_lens[i], Lp)
-        M = decode_matrix(code.n, code.k, idx)
-        dec = np.asarray(apply_fn(M, arr))  # (Bp, k, Lp)
-        for row, i in enumerate(idxs):
-            L, nbytes = piece_lens[i], jobs[i][1]
-            out[i] = dec[row, :, :L].reshape(-1)[:nbytes].tobytes()
-    return out  # type: ignore[return-value]
+    return batch_decode_blobs_finish(batch_decode_blobs_begin(
+        code, jobs, apply_fn, quantum=quantum, pad_batch=pad_batch))
 
 
 @dataclasses.dataclass(frozen=True)

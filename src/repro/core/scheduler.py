@@ -236,9 +236,12 @@ class SchedulerStats:
     n_get_windows: int = 0
     n_delete_windows: int = 0
     n_auto_flushes: int = 0  # flushes triggered by size/interval thresholds
+    n_pipelined_windows: int = 0  # put windows whose chunk pass was issued
+    #                               ahead, overlapping the previous window
     gf_launches: int = 0  # GF(256) launches issued during flushes
     sha1_launches: int = 0
     gear_launches: int = 0  # device chunking launches issued during flushes
+    fused_launches: int = 0  # fused hash+encode ingest launches
     flush_seconds: float = 0.0
     # background repair lane (bounded drain of the store's repair queue
     # after each flush window; launch counts kept separate from the
@@ -251,7 +254,8 @@ class SchedulerStats:
 
     @property
     def data_plane_launches(self) -> int:
-        return self.gf_launches + self.sha1_launches + self.gear_launches
+        return (self.gf_launches + self.sha1_launches + self.gear_launches
+                + self.fused_launches)
 
 
 class BatchScheduler:
@@ -293,7 +297,8 @@ class BatchScheduler:
                  flush_bytes: int | None = None,
                  flush_interval: float | None = None,
                  clock: Callable[[], float] = time.monotonic,
-                 repair_chunks_per_flush: int | None = None) -> None:
+                 repair_chunks_per_flush: int | None = None,
+                 pipeline: bool = True) -> None:
         self.store = store
         self.queue = queue or RequestQueue()
         self.stats = SchedulerStats()
@@ -303,6 +308,12 @@ class BatchScheduler:
         self._pending_bytes = 0
         self._window_opened: float | None = None
         self.repair_chunks_per_flush = repair_chunks_per_flush
+        # double-buffer put windows within a flush: issue window i+1's
+        # device chunking pass before window i's host phases run.  The
+        # begin phase touches no store state, so results stay
+        # byte-identical to pipeline=False (sequential-equivalence tests
+        # cover both settings).
+        self.pipeline = pipeline
 
     # ------------------------------------------------------------- submit --
     def submit_put(self, user: str, files: list[tuple[str, bytes]],
@@ -394,10 +405,27 @@ class BatchScheduler:
             return []
         before = LAUNCHES.snapshot()
         t0 = time.perf_counter()
-        for window in self._windows(requests):
+        windows = self._windows(requests)
+        # pipelined put ingest: PutWindowState for put windows whose
+        # chunk pass was issued ahead of their execution slot.  Beginning
+        # a put window reads no store state, so issuing it early -- even
+        # across an intervening get/delete window -- cannot change any
+        # window's outcome.
+        begun: dict[int, object] = {}
+        for j, window in enumerate(windows):
             try:
                 if window[0].kind == PUT:
-                    self.store._batch_put(window)
+                    state = begun.pop(j, None)
+                    if state is None:
+                        state = self.store._put_window_begin(window)
+                    if self.pipeline:
+                        for j2 in range(j + 1, len(windows)):
+                            if windows[j2][0].kind == PUT:
+                                begun[j2] = self.store._put_window_begin(
+                                    windows[j2])
+                                self.stats.n_pipelined_windows += 1
+                                break
+                    self.store._put_window_finish(state)
                     self.stats.n_put_windows += 1
                 elif window[0].kind == GET:
                     self.store._batch_get(window)
@@ -419,6 +447,7 @@ class BatchScheduler:
         self.stats.gf_launches += delta.gf
         self.stats.sha1_launches += delta.sha1
         self.stats.gear_launches += delta.gear
+        self.stats.fused_launches += delta.fused
         self.stats.flush_seconds += time.perf_counter() - t0
         self._repair_window()
         return requests

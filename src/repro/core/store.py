@@ -138,6 +138,22 @@ class StoreStats:
         return self.logical_bytes / max(1, self.consumed_bytes)
 
 
+@dataclasses.dataclass
+class PutWindowState:
+    """An issued-but-unfinished put window (``_put_window_begin``).
+
+    ``pending`` is the engine's chunking token -- on the kernel engines
+    an in-flight device gear launch; ``error`` records a shared
+    begin-phase failure to be raised at finish time.
+    """
+
+    requests: list
+    validated: list
+    req_cls: list
+    pending: object
+    error: Exception | None = None
+
+
 class SEARSStore:
     def __init__(self, n: int | None = None, k: int | None = None,
                  num_clusters: int = 20, node_capacity: int = 1 << 30,
@@ -311,13 +327,63 @@ class SEARSStore:
         requests commit as if the failed ones had been issued -- and
         failed -- separately.  Results/errors are recorded on the request
         objects; this method raises nothing per-request.
+
+        Implemented as ``_put_window_begin`` + ``_put_window_finish`` so
+        callers that hold several windows (``put_windows_pipelined``, the
+        scheduler's pipelined flush) can issue window *i+1*'s device
+        chunking pass before window *i*'s host phases complete.
         """
-        # data plane: chunk + hash every file of every request in one
-        # batch.  Payloads are normalized per request first (a malformed
-        # payload or unknown storage class fails only its own request and
-        # stays out of the shared batch); the surviving window then runs
-        # through one engine chunking pass per chunker config and one
-        # hash batch.
+        self._put_window_finish(self._put_window_begin(requests))
+
+    def put_windows_pipelined(self, windows, timestamp: float = 0.0,
+                              storage_class: str | None = None
+                              ) -> list[list[UploadStats]]:
+        """Upload a stream of put windows with double-buffered ingest.
+
+        ``windows`` is an iterable (list or generator, e.g.
+        ``repro.core.workload.streaming_window_trace``) of window batches,
+        each ``[(user, [(filename, data), ...]), ...]``.  Window *i+1*'s
+        device chunking pass is issued before window *i*'s host phases
+        (boundary selection, dedup planning, piece writes) run, so on the
+        kernel engines the gear launch of the next window overlaps the
+        control-plane work of the current one.  Results are byte- and
+        stats-identical to sequential ``put_files`` calls per window
+        batch (begin touches no store state; all dedup/placement happens
+        at finish time in window order).  Returns one flat
+        ``[UploadStats]`` list per window, in request order; any request
+        failure raises, exactly like ``put_files``.
+        """
+        from repro.core.scheduler import PUT, Request
+        all_reqs: list[list] = []
+        prev: PutWindowState | None = None
+        for batch in windows:
+            reqs = [Request(request_id=i, user=user, kind=PUT,
+                            files=list(files), timestamp=timestamp,
+                            storage_class=storage_class)
+                    for i, (user, files) in enumerate(batch)]
+            all_reqs.append(reqs)
+            state = self._put_window_begin(reqs)
+            if prev is not None:
+                self._put_window_finish(prev)
+            prev = state
+        if prev is not None:
+            self._put_window_finish(prev)
+        out: list[list[UploadStats]] = []
+        for reqs in all_reqs:
+            for req in reqs:
+                self._one_request(req)
+            out.append([s for req in reqs for s in req.result])
+        return out
+
+    def _put_window_begin(self, requests) -> "PutWindowState":
+        """Validate payloads and *issue* the window's chunking pass.
+
+        Touches no store state (no index/cluster/meta mutation), so a
+        later window may begin while an earlier one is still finishing --
+        sequential equivalence is preserved because all dedup/placement
+        decisions happen at finish time, in window order.  On the kernel
+        engines the returned state holds an in-flight device gear launch.
+        """
         validated: list[list[tuple[str, bytes, np.ndarray]]] = []
         req_cls: list[StorageClass | None] = []
         for req in requests:
@@ -337,8 +403,23 @@ class SEARSStore:
         window_jobs = [(cls.chunker, arr)
                        for cls, per_file in zip(req_cls, validated)
                        for _, _, arr in per_file]
+        pending, error = None, None
         try:
-            window_spans = self.engine.chunk_blobs_multi(window_jobs)
+            pending = self.engine.chunk_blobs_multi_begin(window_jobs)
+        except Exception as exc:
+            error = exc
+        return PutWindowState(requests=requests, validated=validated,
+                              req_cls=req_cls, pending=pending, error=error)
+
+    def _put_window_finish(self, state: "PutWindowState") -> None:
+        """Resolve an issued put window: hash/encode, plan, land pieces."""
+        requests, validated = state.requests, state.validated
+        req_cls = state.req_cls
+        try:
+            if state.error is not None:
+                raise state.error
+            window_spans = self.engine.chunk_blobs_multi_finish(
+                state.pending)
         except Exception as exc:
             # shared chunk-pass failure: nothing planned or landed yet --
             # every live request in the window fails (mirrors the shared
@@ -351,8 +432,9 @@ class SEARSStore:
         chunked: list[list[tuple[str, bytes, list[tuple[int, int]],
                                  list[bytes]]]] = []
         all_chunks: list[bytes] = []
+        all_codes: list = []
         blob_pos = 0
-        for req, per_file in zip(requests, validated):
+        for req, cls, per_file in zip(requests, req_cls, validated):
             out = []
             for filename, data, arr in per_file:
                 spans = window_spans[blob_pos]
@@ -360,8 +442,32 @@ class SEARSStore:
                 chunks = [arr[o:o + l].tobytes() for o, l in spans]
                 out.append((filename, data, spans, chunks))
                 all_chunks.extend(chunks)
+                all_codes.extend([cls.code] * len(chunks))
             chunked.append(out)
-        all_ids = self.engine.hash_chunks(all_chunks)
+
+        # hashing -- on a fused engine the window's chunks are hashed AND
+        # speculatively RS-encoded in the same device residency (one
+        # launch per piece-length bucket); pieces for chunks the dedup
+        # pass later rejects are simply dropped.  Staged engines hash
+        # here and encode in _execute_uploads as before.
+        precomputed: dict[tuple[int, int, bytes], list[bytes]] | None = None
+        try:
+            if getattr(self.engine, "supports_fused_ingest", False):
+                all_ids, all_pieces = self.engine.hash_encode_blobs_multi(
+                    list(zip(all_codes, all_chunks)))
+                precomputed = {
+                    (code.n, code.k, cid): pieces
+                    for code, cid, pieces in zip(all_codes, all_ids,
+                                                 all_pieces)}
+            else:
+                all_ids = self.engine.hash_chunks(all_chunks)
+        except Exception as exc:
+            # shared hash batch failure: same blast radius as the chunk
+            # pass -- nothing planned yet, fail the whole window
+            for req in requests:
+                if req.error is None:
+                    req.status, req.error = "failed", exc
+            return
 
         # control plane: plan request by request in submit order (so later
         # requests dedup against chunks introduced by earlier ones, exactly
@@ -396,7 +502,8 @@ class SEARSStore:
         live = [r for r in requests if r.error is None]
         all_plans = [p for r in live for p in plans_by_req[r.request_id]]
         try:
-            failed_copies, write_error = self._execute_uploads(all_plans)
+            failed_copies, write_error = self._execute_uploads(
+                all_plans, precomputed=precomputed)
         except Exception as exc:
             # encode-batch failure: nothing landed, reservations already
             # released -- every request in the window rolls back
@@ -517,14 +624,18 @@ class SEARSStore:
                           encode_tasks=tasks, entries=entries,
                           request_id=request_id, storage_class=cls.name)
 
-    def _execute_uploads(self, plans: list[UploadPlan]
+    def _execute_uploads(self, plans: list[UploadPlan], precomputed=None
                          ) -> tuple[set[tuple[bytes, int]], Exception | None]:
         """Data plane: batched RS encode + bulk per-cluster piece writes.
 
         Encode jobs are bucketed by the owning cluster's code (one engine
         batch per distinct ``(n, k)``, each internally length-bucketed),
         so a mixed-class window costs O(code buckets x length buckets)
-        GF launches.  Returns ``(failed_copies, error)``: the (chunk_id,
+        GF launches.  ``precomputed`` maps ``(n, k, chunk_id)`` to pieces
+        a fused hash+encode pass already produced; tasks found there skip
+        the encode batch entirely (with a fused engine that is every live
+        task, so ``encode_blobs_multi`` sees an empty job list and issues
+        nothing).  Returns ``(failed_copies, error)``: the (chunk_id,
         cluster_id) copies whose pieces could not be stored (dead-node
         writes) and the first write error, so the caller can demux the
         failure back to the requests that reference those copies.
@@ -532,6 +643,7 @@ class SEARSStore:
         aborts the others.  An encode-batch failure raises (after
         releasing all reservations).
         """
+        pre = precomputed or {}
         tasks = [t for p in plans for t in p.encode_tasks]
         # a later file in the batch may have overwritten/deleted an earlier
         # one; drop tasks whose chunk copy is no longer indexed
@@ -547,18 +659,29 @@ class SEARSStore:
             reserved[t.cluster_id] = (
                 reserved.get(t.cluster_id, 0)
                 + self.clusters[t.cluster_id].n * t.piece_len)
+        ready: dict[int, list[bytes]] = {}
+        to_encode = []
+        for i, t in enumerate(live):
+            code = self.clusters[t.cluster_id].code
+            hit = pre.get((code.n, code.k, t.chunk_id))
+            if hit is not None:
+                ready[i] = hit
+            else:
+                to_encode.append((i, t))
         try:
-            pieces_per_task = self.engine.encode_blobs_multi(
+            encoded = self.engine.encode_blobs_multi(
                 [(self.clusters[t.cluster_id].code, t.data)
-                 for t in live])  # coding nodes
+                 for _, t in to_encode])  # coding nodes
         except Exception:
             for cluster_id, nbytes in reserved.items():
                 self.clusters[cluster_id].release_reservation(nbytes)
             raise
+        for (i, _), pieces in zip(to_encode, encoded):
+            ready[i] = pieces
         by_cluster: dict[int, list[tuple[bytes, list[bytes]]]] = {}
-        for t, pieces in zip(live, pieces_per_task):
+        for i, t in enumerate(live):
             by_cluster.setdefault(t.cluster_id, []).append(
-                (t.chunk_id, pieces))
+                (t.chunk_id, ready[i]))
         failed: set[tuple[bytes, int]] = set()
         error: Exception | None = None
         for cluster_id, items in by_cluster.items():
@@ -606,6 +729,90 @@ class SEARSStore:
         self._batch_get([req])
         self._one_request(req)
         return req.result
+
+    def get_files_pipelined(self, user: str, filenames: list[str],
+                            window_files: int = 4,
+                            local_chunk_ids: set[bytes] | None = None,
+                            rho_fn=None,
+                            storage_class: str | None = None
+                            ) -> list[tuple[bytes, RetrievalStats]]:
+        """Retrieve many files with a prefetched double-buffered pipeline.
+
+        Files are grouped into windows of ``window_files``; while window
+        *i*'s decode launches are in flight on the device, window
+        *i+1*'s control-plane work -- ``RetrievalPlan`` construction and
+        bulk cluster piece reads -- is issued, and only then is window
+        *i* materialized and assembled.  Byte- and stats-identical to
+        ``get_files`` over the same filename list (assembly order, and
+        therefore the latency-model rng draw order, is filename order in
+        both paths); failures raise exactly like ``get_files``.
+        """
+        windows = [filenames[i:i + window_files]
+                   for i in range(0, len(filenames), window_files)]
+        out: list[tuple[bytes, RetrievalStats]] = []
+        prev = None
+        for window in windows:
+            state = self._get_window_begin(user, window, local_chunk_ids,
+                                           storage_class)
+            if prev is not None:
+                out.extend(self._get_window_finish(prev, rho_fn))
+            prev = state
+        if prev is not None:
+            out.extend(self._get_window_finish(prev, rho_fn))
+        return out
+
+    def _get_window_begin(self, user: str, filenames: list[str],
+                          local_chunk_ids: set[bytes] | None,
+                          storage_class: str | None):
+        """Plan + read one retrieval window and *issue* its decodes.
+
+        Raises on a missing file or an unrecoverable chunk (same errors,
+        same messages as ``get_files``); on success returns a state whose
+        decode launches are in flight but unmaterialized.
+        """
+        plans = [self._plan_get(user, fn, local_chunk_ids,
+                                storage_class=storage_class)
+                 for fn in filenames]
+        tasks = [t for p in plans for t in p.fetch_tasks]
+        by_cluster: dict[int, list[FetchTask]] = {}
+        for t in tasks:
+            by_cluster.setdefault(t.cluster_id, []).append(t)
+        for cluster_id, ctasks in by_cluster.items():
+            got = self.clusters[cluster_id].read_pieces_batch(
+                [t.chunk_id for t in ctasks],
+                self.clusters[cluster_id].k)
+            for t in ctasks:
+                t.pieces = got[t.chunk_id]
+        for t in tasks:
+            systematic = set(range(self.clusters[t.cluster_id].k))
+            if t.pieces is not None and set(t.pieces) != systematic:
+                self.repair.hint(t.chunk_id, t.cluster_id)
+        for t in tasks:
+            want = self.clusters[t.cluster_id].k
+            if len(t.pieces) < want:
+                raise ValueError(
+                    f"need >= k={want} pieces to decode, got "
+                    f"{len(t.pieces)} (chunk {t.chunk_id.hex()})")
+        uniq: dict[tuple[bytes, int], FetchTask] = {}
+        for p in plans:
+            for t in p.fetch_tasks:
+                uniq.setdefault((t.chunk_id, t.cluster_id), t)
+        token = self.engine.decode_blobs_multi_begin(
+            [(self.clusters[t.cluster_id].code, t.pieces, t.length)
+             for t in uniq.values()])
+        return (plans, list(uniq), token)
+
+    def _get_window_finish(self, state, rho_fn
+                           ) -> list[tuple[bytes, RetrievalStats]]:
+        """Materialize an issued retrieval window and assemble its files."""
+        plans, keys, token = state
+        blobs = self.engine.decode_blobs_multi_finish(token)
+        blob_by_key = dict(zip(keys, blobs))
+        return [self._assemble(
+            plan,
+            {t.chunk_id: blob_by_key[(t.chunk_id, t.cluster_id)]
+             for t in plan.fetch_tasks},
+            rho_fn) for plan in plans]
 
     def _batch_get(self, requests) -> None:
         """Shared get window: coalesce many requests' reads and decodes.

@@ -221,6 +221,54 @@ def multi_user_get_trace(put_trace: list[tuple[str, list[tuple[str, bytes]]]]
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamingConfig:
+    """Trace shape for the double-buffered multi-window ingest pipeline.
+
+    A steady stream of put windows -- each one flush-window's worth of
+    per-user batches -- arriving back to back, the workload
+    ``SEARSStore.put_windows_pipelined`` overlaps: window *i+1*'s device
+    chunking pass runs under window *i*'s host phases.  A shared block
+    pool spans all windows so later windows dedup against earlier ones
+    (cross-window redundancy), exactly like a long-running switching
+    node's traffic.
+    """
+
+    n_windows: int = 6
+    users_per_window: int = 2
+    files_per_user: int = 3
+    file_kb: int = 64
+    shared_fraction: float = 0.3
+    block: int = 8 << 10
+    seed: int = 47
+
+
+def streaming_window_trace(cfg: StreamingConfig
+                           ) -> Iterator[list[tuple[str,
+                                                    list[tuple[str, bytes]]]]]:
+    """Lazily yield put windows of (user, files) batches.
+
+    Deterministic in ``cfg.seed`` -- every (window, user, file) triple
+    derives its own content seed -- and a generator on purpose: the
+    pipelined ingest path consumes windows as a stream, materializing at
+    most two (the one finishing and the one whose chunk pass is in
+    flight).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pool = _BlockPool(rng, cfg.block, count=256)
+    for w in range(cfg.n_windows):
+        window: list[tuple[str, list[tuple[str, bytes]]]] = []
+        for u in range(cfg.users_per_window):
+            files = [(f"w{w}/u{u}/f{f}",
+                      _mixed_bytes(cfg.seed * 2_000_003
+                                   + w * 10_007 + u * 997 + f,
+                                   cfg.file_kb << 10, pool,
+                                   cfg.shared_fraction, cfg.block))
+                     for f in range(cfg.files_per_user)]
+            window.append((f"user{u}", files))
+        yield window
+
+
+@dataclasses.dataclass(frozen=True)
 class MixedClassConfig:
     """Trace shape for mixed real-time/archival traffic (storage classes).
 

@@ -66,7 +66,11 @@ def pad_to_bucket(data):
 
 
 def _kernel(cur_ref, prev_ref, gear_ref, out_ref):
-    p = pl.program_id(0)
+    out_ref[...] = _hash_tile(pl.program_id(0), cur_ref, prev_ref, gear_ref)
+
+
+def _hash_tile(p, cur_ref, prev_ref, gear_ref):
+    """Shared kernel body: the (TILE,) gear hashes of grid cell ``p``."""
     halo = WINDOW - 1
     gear = gear_ref[...]  # (256,) uint32 (as int32 bits)
     cur = cur_ref[...].astype(jnp.int32)  # (TILE,)
@@ -82,7 +86,58 @@ def _kernel(cur_ref, prev_ref, gear_ref, out_ref):
     for j in range(WINDOW):
         h = h + (jax.lax.dynamic_slice(ext, (halo - j,), (TILE,))
                  << jnp.uint32(j))
-    out_ref[...] = h
+    return h
+
+
+def _fire_kernel(cur_ref, prev_ref, gear_ref, mask_ref, out_ref):
+    """Fused hash + boundary test: emit the fire bitmap, not the hashes.
+
+    The mask test runs on the still-VMEM-resident hash vector, so only a
+    1-byte-per-position bool bitmap ships back to the host instead of the
+    4-byte uint32 hash array (the staged path's round-trip).
+    """
+    h = _hash_tile(pl.program_id(0), cur_ref, prev_ref, gear_ref)
+    out_ref[...] = (h & mask_ref[...][0]) == 0
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _gear_fire_padded(data: jnp.ndarray, gear: jnp.ndarray,
+                      mask: jnp.ndarray,
+                      interpret: bool = True) -> jnp.ndarray:
+    TRACES.gear += 1  # trace-time only: one increment per compiled shape
+    n = data.shape[0]
+    grid = (n // TILE,)
+    return pl.pallas_call(
+        _fire_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda p: (p,)),
+            pl.BlockSpec((TILE,), lambda p: (jnp.maximum(p - 1, 0),)),
+            pl.BlockSpec((256,), lambda p: (0,)),
+            pl.BlockSpec((1,), lambda p: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(data, data, gear, mask)
+
+
+def gear_fire(data, mask, interpret: bool = True) -> jnp.ndarray:
+    """(N,) uint8 + boundary mask -> (N,) bool fire bitmap (one launch).
+
+    The fused twin of :func:`gear_hash`: hash and mask test both run on
+    device, so the result is the boolean candidate bitmap (pad positions
+    are sliced off like the hash path).  Returns the *device* array
+    unmaterialized -- callers overlap host work with the launch and
+    compact to positions with ``np.flatnonzero`` when they resolve it.
+    """
+    data = jnp.asarray(data, jnp.uint8)
+    n = data.shape[0]
+    if n == 0:
+        return jnp.zeros((0,), jnp.bool_)
+    mask_arr = jnp.asarray([mask], jnp.uint32)
+    return _gear_fire_padded(pad_to_bucket(data), _device_gear_table(),
+                             mask_arr, interpret=interpret)[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -18,10 +18,11 @@ class LaunchCounter:
     gf: int = 0  # GF(256) matmul launches (encode + decode buckets)
     sha1: int = 0  # SHA-1 batch launches
     gear: int = 0  # gear CDC rolling-hash launches (chunking stream)
+    fused: int = 0  # fused SHA-1+GF ingest launches (one per bucket)
 
     @property
     def total(self) -> int:
-        return self.gf + self.sha1 + self.gear
+        return self.gf + self.sha1 + self.gear + self.fused
 
     def snapshot(self) -> "LaunchCounter":
         return dataclasses.replace(self)
@@ -29,10 +30,11 @@ class LaunchCounter:
     def delta(self, since: "LaunchCounter") -> "LaunchCounter":
         return LaunchCounter(gf=self.gf - since.gf,
                              sha1=self.sha1 - since.sha1,
-                             gear=self.gear - since.gear)
+                             gear=self.gear - since.gear,
+                             fused=self.fused - since.fused)
 
     def reset(self) -> None:
-        self.gf = self.sha1 = self.gear = 0
+        self.gf = self.sha1 = self.gear = self.fused = 0
 
 
 LAUNCHES = LaunchCounter()

@@ -117,6 +117,29 @@ def rs_decode_blobs(code, jobs: list[tuple[dict[int, bytes], int]],
         quantum=TILE_L, pad_batch=_pow2)
 
 
+def rs_decode_blobs_begin(code, jobs: list[tuple[dict[int, bytes], int]],
+                          impl: str = "kernel"):
+    """Issue the decode launches for a job batch without materializing.
+
+    Same bucketing and launch economics as ``rs_decode_blobs``; the
+    returned state holds unmaterialized device arrays (JAX async
+    dispatch), so the caller can overlap host work -- planning and
+    cluster reads for the *next* retrieval window -- with the decode.
+    Pass the state to ``rs_decode_blobs_finish`` for the bytes.
+    """
+    from repro.core import rs_code
+    from repro.kernels.gf_matmul import TILE_L
+    return rs_code.batch_decode_blobs_begin(
+        code, jobs, lambda M, arr: rs_apply(M, arr, impl=impl),
+        quantum=TILE_L, pad_batch=_pow2)
+
+
+def rs_decode_blobs_finish(state) -> list[bytes]:
+    """Block on launches issued by ``rs_decode_blobs_begin`` -> blobs."""
+    from repro.core import rs_code
+    return rs_code.batch_decode_blobs_finish(state)
+
+
 # ------------------------------------------------------------------ gear ---
 @jax.jit
 def _gear_ref_padded(data: jnp.ndarray) -> jnp.ndarray:
@@ -158,27 +181,48 @@ def _gear_fire_ref(data: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return (ref.gear_hash_ref(data) & mask) == 0
 
 
+def gear_fire_issue(data, mask, impl: str = "kernel"):
+    """Dispatch one fused gear hash + mask launch; the result stays on device.
+
+    Returns the unmaterialized (N,) bool fire bitmap (``None`` for an
+    empty stream).  JAX dispatch is async, so the caller is free to do
+    host work -- greedy boundary selection of the *previous* window,
+    plan building -- while the launch runs; ``gear_fire_resolve``
+    blocks on and compacts the bitmap when it is actually needed.  Both
+    the Pallas kernel (``gear_cdc.gear_fire``) and the jitted ref oracle
+    fuse the mask test into the launch, so the full uint32 hash array
+    never round-trips to the host.
+    """
+    data = np.asarray(data, np.uint8)
+    if data.shape[0] == 0:
+        return None
+    LAUNCHES.gear += 1
+    if impl == "ref":
+        n = data.shape[0]
+        return _gear_fire_ref(gear_cdc.pad_to_bucket(data),
+                              jnp.uint32(np.uint32(mask)))[:n]
+    return gear_cdc.gear_fire(data, np.uint32(mask),
+                              interpret=not _on_tpu())
+
+
+def gear_fire_resolve(fire) -> np.ndarray:
+    """Materialize an issued fire bitmap -> sorted candidate positions."""
+    if fire is None:
+        return np.zeros(0, np.int64)
+    return np.flatnonzero(np.asarray(fire)).astype(np.int64)
+
+
 def gear_candidate_positions(data, mask, impl: str = "kernel") -> np.ndarray:
     """One gear launch over an ingest stream -> sorted candidate positions.
 
     The device twin of ``chunking.gear_candidates_np``: the 32-tap hash
-    and the boundary mask test run on the device (one bucketed launch,
-    bool fire bitmap shipped back instead of the 4-byte-per-position hash
-    array); the sparse ``flatnonzero`` compaction stays on the host.
+    and the boundary mask test run fused on the device (one bucketed
+    launch, bool fire bitmap shipped back instead of the 4-byte-per-
+    position hash array); the sparse ``flatnonzero`` compaction stays on
+    the host.  ``gear_fire_issue``/``gear_fire_resolve`` split the same
+    work for callers that overlap host work with the launch.
     """
-    data = np.asarray(data, np.uint8)
-    n = data.shape[0]
-    if n == 0:
-        return np.zeros(0, np.int64)
-    LAUNCHES.gear += 1
-    mask = jnp.uint32(np.uint32(mask))
-    if impl == "ref":
-        fire = np.asarray(_gear_fire_ref(gear_cdc.pad_to_bucket(data),
-                                         mask))[:n]
-    else:
-        h = gear_cdc.gear_hash(data, interpret=not _on_tpu())
-        fire = np.asarray((h & mask) == 0)
-    return np.flatnonzero(fire).astype(np.int64)
+    return gear_fire_resolve(gear_fire_issue(data, mask, impl=impl))
 
 
 # ----------------------------------------------------------- attention ----
@@ -197,14 +241,15 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 # ------------------------------------------------------------------ sha1 ---
-@jax.jit
-def _sha1_ref_loop(blocks: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    """Jit-cached SHA-1 oracle: ``fori_loop`` over blocks, not unrolled.
+def _sha1_words_loop(blocks: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """SHA-1 oracle body: ``fori_loop`` over blocks, not unrolled.
 
     Semantically identical to ``ref.sha1_ref`` but traces the 80-round
-    compression once regardless of the padded block count, so the fixed
-    (hash_batch, M, 16) engine launch compiles in O(1) and is reused for
-    every subsequent batch.
+    compression once regardless of the padded block count, so a bucketed
+    (B, M, 16) launch compiles in O(1) and is reused for every
+    subsequent batch.  Shared by the standalone jitted entry point and
+    the fused ingest launch (which runs it in the same residency as the
+    GF encode).
     """
     B, M, _ = blocks.shape
     h0 = jnp.broadcast_to(jnp.asarray(hashing.SHA1_H0.astype(np.int64),
@@ -215,6 +260,9 @@ def _sha1_ref_loop(blocks: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
         return jnp.where((m < counts)[:, None], upd, h)
 
     return jax.lax.fori_loop(0, M, body, h0)
+
+
+_sha1_ref_loop = jax.jit(_sha1_words_loop)
 
 
 def sha1_digests(chunks: list[bytes], impl: str = "kernel") -> list[bytes]:
@@ -232,3 +280,82 @@ def sha1_digest_words(blocks, counts, impl: str = "kernel") -> jnp.ndarray:
         return _sha1_ref_loop(jnp.asarray(blocks, jnp.uint32),
                               jnp.asarray(counts, jnp.int32).reshape(-1))
     return sha1.sha1_digest_words(blocks, counts, interpret=not _on_tpu())
+
+
+# ----------------------------------------------------------- fused ingest --
+# One launch per piece-length bucket computing SHA-1 chunk ids AND the RS
+# code pieces of the same chunks: the chunk bytes go to the device once
+# (laid out (B, k, Lp) for the GF matmul, plus the SHA-1 message schedule)
+# and both results come back from a single dispatch, instead of the staged
+# path's separate SHA-1 launch + GF launch with a host round-trip between
+# them.  Counted in ``LAUNCHES.fused`` (neither .sha1 nor .gf ticks).
+
+@jax.jit
+def _fused_ingest_ref(Mdev: jnp.ndarray, blocks: jnp.ndarray,
+                      counts: jnp.ndarray, data: jnp.ndarray):
+    """Fused jitted oracle: SHA-1 words + GF encode in one dispatch."""
+    TRACES.fused += 1  # trace-time only: one increment per compiled shape
+    return _sha1_words_loop(blocks, counts), ref.gf_matmul_ref(Mdev, data)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_ingest_pallas(gbits: jnp.ndarray, blocks: jnp.ndarray,
+                         counts: jnp.ndarray, data: jnp.ndarray,
+                         interpret: bool = True):
+    """Fused Pallas path: both kernels issued under one jit (one residency)."""
+    TRACES.fused += 1  # trace-time only: one increment per compiled shape
+    return (sha1.sha1_digest_words(blocks, counts, interpret=interpret),
+            gf_matmul._gf_matmul_padded(gbits, data, interpret=interpret))
+
+
+def fused_hash_encode_blobs(code, blobs: list[bytes], impl: str = "kernel"
+                            ) -> tuple[list[bytes], list[list[bytes]]]:
+    """Fused SHA-1 + RS encode of a blob batch -> (ids, pieces per blob).
+
+    Blobs are bucketed by padded piece length exactly like
+    ``rs_encode_blobs`` (quantum TILE_L, power-of-two batch), so a window
+    costs O(length buckets) fused launches; the SHA-1 message schedule is
+    capped at ``k * Lp`` bytes per bucket -- every blob of the bucket
+    fits by construction (``piece_len(len) <= Lp``), so there is no
+    oversized-chunk fallback on this path.  Byte-identical to running
+    ``sha1_digests`` and ``rs_encode_blobs`` separately.
+    """
+    from repro.core import rs_code
+    from repro.kernels.gf_matmul import TILE_L
+    if not blobs:
+        return [], []
+    G = np.ascontiguousarray(np.asarray(
+        rs_code.generator_matrix(code.n, code.k), dtype=np.uint8))
+    piece_lens = [code.piece_len(len(b)) for b in blobs]
+    ids: list[bytes | None] = [None] * len(blobs)
+    pieces: list[list[bytes] | None] = [None] * len(blobs)
+    for Lp, idxs in rs_code.bucket_by_piece_len(piece_lens, TILE_L).items():
+        Bp = _pow2(len(idxs))
+        data = np.zeros((Bp, code.k, Lp), dtype=np.uint8)
+        group: list[bytes] = []
+        for row, i in enumerate(idxs):
+            data[row] = rs_code.pack_blob(blobs[i], code.k,
+                                          piece_lens[i], Lp)
+            group.append(blobs[i])
+        group += [b""] * (Bp - len(idxs))
+        blocks, counts = hashing.sha1_pad_batch(group, max_len=code.k * Lp)
+        LAUNCHES.fused += 1
+        if impl == "ref":
+            Mdev = _device_matrix(G.tobytes(), *G.shape)
+            words, enc = _fused_ingest_ref(
+                Mdev, jnp.asarray(blocks, jnp.uint32),
+                jnp.asarray(counts, jnp.int32), jnp.asarray(data))
+        else:
+            gbits = gf_matmul._gbits_cached(G.tobytes(), *G.shape)
+            words, enc = _fused_ingest_pallas(
+                gbits, jnp.asarray(blocks, jnp.uint32),
+                jnp.asarray(counts, jnp.int32), jnp.asarray(data),
+                interpret=not _on_tpu())
+        digests = hashing.digest_words_to_bytes(
+            np.asarray(words)[:len(idxs)])
+        enc = np.asarray(enc)
+        for row, i in enumerate(idxs):
+            L = piece_lens[i]
+            ids[i] = digests[row]
+            pieces[i] = [enc[row, j, :L].tobytes() for j in range(code.n)]
+    return ids, pieces  # type: ignore[return-value]

@@ -67,32 +67,44 @@ def _kernel(blocks_ref, counts_ref, out_ref, *, n_blocks: int):
     out_ref[...] = jnp.stack(h, axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def _sha1_padded(blocks: jnp.ndarray, counts: jnp.ndarray,
-                 interpret: bool = True) -> jnp.ndarray:
+                 interpret: bool = True, tile: int = TILE_B) -> jnp.ndarray:
     B, M, _ = blocks.shape
-    grid = (B // TILE_B,)
+    grid = (B // tile,)
     return pl.pallas_call(
         functools.partial(_kernel, n_blocks=M),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_B, M, 16), lambda b: (b, 0, 0)),
-            pl.BlockSpec((TILE_B, 1), lambda b: (b, 0)),
+            pl.BlockSpec((tile, M, 16), lambda b: (b, 0, 0)),
+            pl.BlockSpec((tile, 1), lambda b: (b, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_B, 5), lambda b: (b, 0)),
+        out_specs=pl.BlockSpec((tile, 5), lambda b: (b, 0)),
         out_shape=jax.ShapeDtypeStruct((B, 5), jnp.uint32),
         interpret=interpret,
     )(blocks, counts)
 
 
 def sha1_digest_words(blocks, counts, interpret: bool = True) -> jnp.ndarray:
-    """(B, M, 16) uint32 padded blocks + (B,) counts -> (B, 5) digests."""
+    """(B, M, 16) uint32 padded blocks + (B,) counts -> (B, 5) digests.
+
+    Batches of at least TILE_B messages pad to a TILE_B multiple and run
+    lane-parallel per grid cell; smaller batches pad to the next power of
+    two and run as one narrower cell, so a short steady-state window does
+    not drag TILE_B-wide dead lanes through the 80-round compression.
+    Either way the compiled-shape set stays bounded (powers of two up to
+    TILE_B, then TILE_B-quantized grids).
+    """
     blocks = jnp.asarray(blocks, jnp.uint32)
     counts = jnp.asarray(counts, jnp.int32).reshape(-1, 1)
     B = blocks.shape[0]
-    pad = (-B) % TILE_B
+    if B >= TILE_B:
+        tile, padded = TILE_B, B + ((-B) % TILE_B)
+    else:
+        tile = padded = 1 << max(0, B - 1).bit_length()
+    pad = padded - B
     if pad:
         blocks = jnp.pad(blocks, ((0, pad), (0, 0), (0, 0)))
         counts = jnp.pad(counts, ((0, pad), (0, 0)))
-    out = _sha1_padded(blocks, counts, interpret=interpret)
+    out = _sha1_padded(blocks, counts, interpret=interpret, tile=tile)
     return out[:B]

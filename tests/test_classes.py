@@ -29,7 +29,7 @@ from repro.core.classes import StorageClass, partition_pools
 from repro.core.store import SEARSStore
 from repro.core.workload import MixedClassConfig, mixed_class_trace
 
-ENGINES = ["numpy", "kernel"]
+ENGINES = ["numpy", "kernel", "fused"]
 
 
 def _data(n, seed=0):

@@ -11,7 +11,8 @@ import hashlib
 import numpy as np
 import pytest
 
-from repro.core.engine import KernelEngine, NumpyEngine, make_engine
+from repro.core.engine import (FusedEngine, KernelEngine, NumpyEngine,
+                               make_engine)
 from repro.core.rs_code import RSCode
 from repro.core.store import SEARSStore
 from repro.kernels import ops
@@ -86,19 +87,20 @@ def test_kernel_engine_hashes_match_hashlib():
         hashlib.sha1(c).digest() for c in chunks]
 
 
-def test_kernel_engine_hash_launch_shapes_stay_fixed(monkeypatch):
+def test_kernel_engine_hash_launch_shapes_stay_bucketed(monkeypatch):
     """Oversized chunks must not widen the compiled (B, M, 16) launch.
 
-    The engine docstring promises "compile once, reuse forever": every
-    SHA-1 launch has the fixed (hash_batch, blocks(max_hash_len), 16)
-    shape.  A chunk longer than ``max_hash_len`` used to silently grow
-    the block axis (``sha1_pad_batch`` took ``max`` of the cap and the
-    batch's own need); now it takes the host fallback instead.
+    The engine docstring promises a bounded compiled-shape set: every
+    SHA-1 launch pads both axes to the next power of two (block axis
+    clamped to blocks(max_hash_len)), so small windows stop paying the
+    worst-case width.  A chunk longer than ``max_hash_len`` used to
+    silently grow the block axis (``sha1_pad_batch`` took ``max`` of the
+    cap and the batch's own need); now it takes the host fallback.
     """
     from repro.kernels import ops
 
     eng = KernelEngine(hash_batch=8, max_hash_len=1024)
-    fixed_blocks = (1024 + 9 + 63) // 64
+    fixed_blocks = (1024 + 9 + 63) // 64  # 17; pow2(17) clamps back to 17
     seen_shapes = []
     real = ops.sha1_digest_words
 
@@ -111,22 +113,30 @@ def test_kernel_engine_hash_launch_shapes_stay_fixed(monkeypatch):
               _data(1024, seed=3), _data(0, seed=4), _data(30_000, seed=5)]
     digests = eng.hash_chunks(chunks)
     assert digests == [hashlib.sha1(c).digest() for c in chunks]
-    assert seen_shapes == [(8, fixed_blocks, 16)]  # one launch, fixed shape
+    # one launch: 3 in-cap chunks pad to batch 4 (pow2), 17 blocks (cap)
+    assert seen_shapes == [(4, fixed_blocks, 16)]
 
 
 def test_sha1_pad_batch_max_len_is_authoritative():
-    """The cap is exact: always that many blocks, overflow raises."""
+    """The cap bounds the block axis; under it, widths bucket to pow2."""
     from repro.core import hashing
 
     blocks, counts = hashing.sha1_pad_batch([b"x" * 10], max_len=1024)
-    assert blocks.shape == (1, (1024 + 9 + 63) // 64, 16)
-    with pytest.raises(ValueError, match="oversized"):
+    assert blocks.shape == (1, 1, 16)  # 1-block need stays 1, not cap=17
+    blocks, _ = hashing.sha1_pad_batch([b"x" * 200], max_len=1024)
+    assert blocks.shape == (1, 4, 16)  # 4-block need: pow2 bucket
+    blocks, _ = hashing.sha1_pad_batch([b"x" * 1024], max_len=1024)
+    assert blocks.shape == (1, 17, 16)  # pow2(17)=32 clamps to the cap
+    with pytest.raises(ValueError, match="host"):
         hashing.sha1_pad_batch([b"x" * 5000], max_len=1024)
 
 
 def test_make_engine_specs():
     assert isinstance(make_engine("numpy"), NumpyEngine)
     assert isinstance(make_engine("kernel"), KernelEngine)
+    fused = make_engine("fused")
+    assert isinstance(fused, FusedEngine)
+    assert fused.supports_fused_ingest
     eng = NumpyEngine()
     assert make_engine(eng) is eng
     with pytest.raises(ValueError):

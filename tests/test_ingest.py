@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core.chunking import WINDOW, Chunker, chunk_spans_batch
-from repro.core.engine import KernelEngine, NumpyEngine
+from repro.core.engine import FusedEngine, KernelEngine, NumpyEngine
 from repro.core.store import SEARSStore
 
 
@@ -27,7 +27,7 @@ def _data(n, seed=0):
         0, 256, size=n, dtype=np.int64).astype(np.uint8).tobytes()
 
 
-ENGINES = [NumpyEngine, KernelEngine]
+ENGINES = [NumpyEngine, KernelEngine, FusedEngine]
 
 
 def _edge_case_window():
@@ -102,7 +102,7 @@ def test_chunk_blobs_forced_max_cuts_match():
     assert spans == chunker.chunk_spans(b"\x00" * 40_000)
 
 
-@pytest.mark.parametrize("engine", ["numpy", "kernel"])
+@pytest.mark.parametrize("engine", ["numpy", "kernel", "fused"])
 def test_store_roundtrip_with_batched_chunking(engine):
     """End-to-end: multi-file window uploads and reads back byte-exact."""
     s = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
@@ -164,6 +164,156 @@ def test_numpy_engine_chunking_stays_off_device():
     before = LAUNCHES.snapshot()
     s.put_files("u", [("f", _data(50_000, seed=50))])
     assert LAUNCHES.delta(before).gear == 0
+
+
+def test_fused_window_launch_counts():
+    """One fused put window: 1 gear + O(piece-len buckets) fused launches,
+    zero staged SHA-1/GF dispatches -- and strictly no more launches than
+    the staged kernel engine on the identical window."""
+    from repro.kernels.launches import LAUNCHES
+
+    files = [(f"f{i}", _data(30_000 + 1000 * i, seed=40 + i))
+             for i in range(12)]
+
+    def window_delta(engine):
+        s = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                       binding="ulb", engine=engine)
+        before = LAUNCHES.snapshot()
+        s.put_files("u", files)
+        return LAUNCHES.delta(before)
+
+    staged = window_delta("kernel")
+    fused = window_delta("fused")
+    assert fused.gear == 1, f"chunking re-serialized: {fused.gear} launches"
+    assert fused.sha1 == 0, "fused window still issued a staged SHA-1 batch"
+    assert fused.gf == 0, "fused window still issued staged GF encodes"
+    assert 1 <= fused.fused <= 8, \
+        f"fused ingest re-serialized: {fused.fused} launches"
+    assert fused.total <= staged.total, \
+        f"fused window ({fused.total}) issued more launches than staged " \
+        f"({staged.total})"
+
+
+def test_fused_steady_state_no_retrace():
+    """Repeated put windows of the same shape must not retrace the fused
+    jit entries (the per-window recompile failure mode)."""
+    from repro.kernels.launches import TRACES
+
+    s = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                   binding="ulb", engine="fused")
+
+    def put(tag):
+        s.put_files("u", [(f"{tag}/f{i}", _data(25_000, seed=70 + i))
+                          for i in range(4)])
+
+    put("warm")  # compiles this window shape
+    t0 = TRACES.snapshot()
+    put("w1")
+    put("w2")
+    delta = TRACES.delta(t0)
+    assert delta.fused == 0, "fused ingest retraced on a repeated window"
+    assert delta.gear == 0, "gear retraced on a repeated window"
+
+
+def test_fused_store_matches_numpy_store():
+    """FusedEngine end state (stats, retrieved bytes) is byte-identical
+    to NumpyEngine over a dedup-heavy mixed window."""
+    blobs = _edge_case_window()
+    files = [(f"f{i}", b) for i, b in enumerate(blobs)]
+
+    def build(engine):
+        s = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                       binding="ulb", seed=3, engine=engine)
+        up = s.put_files("u", files)
+        got = s.get_files("u", [fn for fn, _ in files])
+        return s, up, got
+
+    sn, upn, gotn = build("numpy")
+    sf, upf, gotf = build("fused")
+    assert upf == upn
+    assert [g[0] for g in gotf] == [g[0] for g in gotn]
+    assert [g[1] for g in gotf] == [g[1] for g in gotn]
+    assert sf.stats() == sn.stats()
+
+
+# --------------------------------------------- double-buffered pipeline ----
+def _stream_windows(n_windows=3, seed=80):
+    from repro.core.workload import StreamingConfig, streaming_window_trace
+    cfg = StreamingConfig(n_windows=n_windows, users_per_window=2,
+                          files_per_user=2, file_kb=24, seed=seed)
+    return list(streaming_window_trace(cfg))
+
+
+@pytest.mark.parametrize("engine", ["numpy", "kernel", "fused"])
+def test_put_windows_pipelined_matches_sequential(engine):
+    """Double-buffered window ingest commits the same bytes, stats and
+    placement as sequential per-window put_files calls."""
+    windows = _stream_windows()
+
+    pipe = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                      binding="ulb", seed=7, engine=engine)
+    got = pipe.put_windows_pipelined(windows)
+
+    seq = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                     binding="ulb", seed=7, engine=engine)
+    want = [[st for user, files in w for st in seq.put_files(user, files)]
+            for w in windows]
+
+    assert got == want
+    assert pipe.stats() == seq.stats()
+    for cp, cs in zip(pipe.clusters, seq.clusters):
+        for np_, ns in zip(cp.nodes, cs.nodes):
+            assert np_._pieces == ns._pieces
+
+
+@pytest.mark.parametrize("engine", ["kernel", "fused"])
+@pytest.mark.parametrize("degraded", [False, True])
+def test_get_files_pipelined_matches_get_files(engine, degraded):
+    """Prefetched multi-window retrieval returns the same bytes and the
+    same latency-model stats as one get_files call (healthy and
+    degraded: systematic memcpy vs real GF decode launches)."""
+    windows = _stream_windows(seed=81)
+    store = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                       binding="ulb", seed=9, engine=engine)
+    store.put_windows_pipelined(windows)
+    if degraded:
+        for c in store.clusters:
+            c.kill_nodes([0, 2, 4, 6, 8])
+    names = [fn for w in windows for u, fs in w if u == "user0"
+             for fn, _ in fs]
+
+    store.rng = np.random.default_rng(123)
+    want = store.get_files("user0", names)
+    store.rng = np.random.default_rng(123)  # same latency rng draws
+    got = store.get_files_pipelined("user0", names, window_files=2)
+    assert [g[0] for g in got] == [w[0] for w in want]
+    assert [g[1] for g in got] == [w[1] for w in want]
+
+
+def test_scheduler_pipelined_flush_matches_unpipelined():
+    """pipeline=True flush: identical artifacts, and the put windows'
+    chunk passes were issued ahead (n_pipelined_windows counts them)."""
+    filesA = [(f"a{i}", _data(15_000, seed=90 + i)) for i in range(3)]
+    filesB = [(f"b{i}", _data(14_000, seed=95 + i)) for i in range(3)]
+
+    def run(pipeline):
+        s = SEARSStore(n=10, k=5, num_clusters=4, node_capacity=64 << 20,
+                       binding="ulb", seed=11, engine="fused")
+        sched = s.scheduler(pipeline=pipeline)
+        fa = sched.submit_put("alice", filesA)
+        fg = sched.submit_get("alice", [fn for fn, _ in filesA[:1]])
+        fb = sched.submit_put("bob", filesB)
+        sched.flush()
+        return (fa.result(), fg.result(), fb.result(), s.stats(),
+                sched.stats)
+
+    ra, ga, rb, stats, sst = run(True)
+    ra2, ga2, rb2, stats2, sst2 = run(False)
+    assert (ra, ga, rb, stats) == (ra2, ga2, rb2, stats2)
+    assert sst.n_pipelined_windows >= 1
+    assert sst2.n_pipelined_windows == 0
+    # the fused engine's ingest launches land in the scheduler's counters
+    assert sst.fused_launches >= 1 and sst.sha1_launches == 0
 
 
 # ------------------------------------------------- retrace regression ------

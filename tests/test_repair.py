@@ -29,7 +29,7 @@ from repro.core.store import SEARSStore
 from repro.core.workload import (StormConfig, apply_storm,
                                  failure_storm_trace)
 
-ENGINES = ["numpy", "kernel"]
+ENGINES = ["numpy", "kernel", "fused"]
 
 
 def _data(n, seed=0):
