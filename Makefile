@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-fast test-launches bench bench-pipeline \
+.PHONY: test test-slow test-fast test-launches lint bench bench-pipeline \
 	bench-smoke bench-repair bench-classes headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
@@ -22,13 +22,19 @@ test-launches:
 	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py \
 		tests/test_classes.py
 
+# searslint: begin-purity, dispatch hygiene, counter coverage, plan
+# determinism (exits 1 on any unwaivered finding)
+lint:
+	$(PYTHON) -m repro.lint src tests benchmarks
+
 # skip the slow model/kernel suites; storage core only
 test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
 		tests/test_scheduler.py tests/test_ingest.py \
 		tests/test_repair.py tests/test_classes.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
-		tests/test_workload_binding.py tests/test_system.py
+		tests/test_workload_binding.py tests/test_system.py \
+		tests/test_lint.py tests/test_sanitizer.py
 
 # full paper-claim benchmark battery (results/bench.json)
 bench:

@@ -30,7 +30,7 @@ def _params(arch="llama32_1b", seed=0):
 def run(quick: bool = True) -> list[dict]:
     rows = []
     store = SEARSStore(num_clusters=4, node_capacity=1 << 30, binding="ulb",
-                       latency=calibrated_params())
+                       sanitize=False, latency=calibrated_params())
     mgr = SEARSCheckpointManager(store=store, run="bench", keep_last=10)
     params = _params()
 

@@ -39,7 +39,7 @@ _OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 def _fresh_store(engine: str) -> SEARSStore:
     return SEARSStore(classes=[StorageClass.realtime(),
                                StorageClass.archival()],
-                      num_clusters=8, node_capacity=1 << 30,
+                      num_clusters=8, node_capacity=1 << 30, sanitize=False,
                       latency=calibrated_params(), engine=engine)
 
 

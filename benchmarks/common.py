@@ -7,6 +7,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.classes import StorageClass
+from repro.kernels import launches
 from repro.core.latency import LatencyParams, calibrate
 from repro.core.radmad import RADMADStore
 from repro.core.store import SEARSStore
@@ -34,8 +35,11 @@ def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
                            node_capacity=node_capacity,
                            container_size=512 << 10, latency=lat, seed=seed)
     cls = StorageClass(name="default", n=n, k=k, binding=scheme)
+    # sanitize=False even under SEARS_SANITIZE=1: benches run many stores
+    # (and deliberate per-chunk baseline arms) over the process-global
+    # LAUNCHES counters, outside the sanitizer's single-store launch model
     return SEARSStore(classes=[cls], num_clusters=clusters,
-                      node_capacity=node_capacity,
+                      node_capacity=node_capacity, sanitize=False,
                       latency=lat, seed=seed, engine=engine)
 
 
@@ -61,6 +65,10 @@ def warm_start(engine: str, clusters: int = 4) -> None:
     for c in store.clusters:
         c.kill_nodes(list(range(0, store.n, 2))[: store.n - store.k])
     store.get_files("warm", names)
+    # start every timed pass from zeroed counters in BOTH families: a
+    # bench that resets launches but reads warmup-era trace counts (or
+    # vice versa) would skew its retrace assertions
+    launches.reset_all()
 
 
 @dataclasses.dataclass

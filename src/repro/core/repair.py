@@ -233,6 +233,9 @@ class RepairManager:
         for start in range(0, len(items), self.sub_batch):
             self._repair_sub_batch(items[start:start + self.sub_batch],
                                    report)
+        san = getattr(self.store, "_sanitizer", None)
+        if san is not None:
+            san.check_window("repair drain")
         return report
 
     def repair(self, cluster_ids: list[int] | None = None,
@@ -301,7 +304,15 @@ class RepairManager:
                     pieces[(cid, cluster_id)] = got[cid]
         jobs = [(store.clusters[it.cluster_id].code, pieces[it.key],
                  it.length) for it in live]
-        _, all_pieces = store.engine.recode_blobs_multi(jobs)
+        san = getattr(store, "_sanitizer", None)
+        if san is not None:
+            # recode = decode + re-encode: two GF launches per rebuilt
+            # chunk is the ceiling, (code, length)-bucketing merges below
+            san.add_budget(gf=2 * len(jobs))
+            _, all_pieces = san.track(store.engine.recode_blobs_multi,
+                                      jobs)
+        else:
+            _, all_pieces = store.engine.recode_blobs_multi(jobs)
         report.n_sub_batches += 1
 
         for it, chunk_pieces in zip(live, all_pieces):

@@ -1,0 +1,241 @@
+"""Runtime sanitizer for the batched data plane (``SEARSStore(...,
+sanitize=True)`` / ``SEARS_SANITIZE=1``).
+
+Three checks, mirroring the searslint static passes at runtime:
+
+1. **Begin purity** — every ``*_begin`` seam runs under
+   :meth:`Sanitizer.guard_begin`, which hashes the store's control-plane
+   state (dedup index, switching tables, cluster/node occupancy,
+   binding state, repair queue) before and after the call and raises
+   :class:`SanitizerError` on any difference.  This is the runtime twin
+   of the PR 6 byte-identity proof: a begin that mutates state breaks
+   pipelined/sequential equivalence.
+
+2. **Expected-launch model** — window hooks accumulate a per-family
+   launch *budget* (gear: one per distinct chunker per put window;
+   sha1: ``ceil(chunks / hash_batch)``; gf/fused: one per ``(code,
+   TILE_L-quantized piece length)`` bucket; repair: decode + encode per
+   rebuilt chunk) and :meth:`check_launches` asserts the launches
+   attributed to this store never exceed it.  Budgets and attributed
+   counts are cumulative over the store's lifetime, so pipelined window
+   interleaving (begin i+1 before finish i) needs no special casing.  The model is an
+   upper bound: an engine may merge buckets or skip host-path work,
+   never dispatch more.
+
+3. **Piece-ledger conservation** — after every put window and repair
+   drain: each ``(chunk, cluster)`` index record's refcount equals the
+   number of live files referencing it (once per file), and every piece
+   held by any node belongs to a live index record under that piece's
+   slot.
+
+``LAUNCHES`` is process-global, so the sanitizer *attributes* launches
+to its own store by bracketing every store code path that dispatches
+device work (:meth:`tracking`); only deltas observed inside those
+brackets count against the budget.  Several sanitized stores can
+therefore interleave in one process (the differential tests do exactly
+that) — each sees only its own traffic.  :meth:`resync` zeroes the
+attributed count and budget if a harness wants a fresh ledger.
+Fingerprinting walks private control-plane structures on purpose — the
+sanitizer is a diagnostics layer and must see exactly the state the
+invariants quantify over.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import hashlib
+from typing import Callable
+
+from repro.kernels.launches import LAUNCHES, LaunchCounter
+
+_FAMILIES = ("gf", "sha1", "gear", "fused")
+
+
+class SanitizerError(AssertionError):
+    """A data-plane invariant was violated at runtime."""
+
+
+def _encode_quantum() -> int:
+    """Piece-length quantization used by the launch model (TILE_L)."""
+    try:
+        from repro.kernels.gf_matmul import TILE_L
+        return TILE_L
+    except Exception:  # jax absent: numpy engines launch nothing anyway
+        return 512
+
+
+class Sanitizer:
+    def __init__(self, store) -> None:
+        self.store = store
+        self._seen = LaunchCounter()   # launches attributed to this store
+        self._budget = LaunchCounter()
+        self._mark = None              # LAUNCHES snapshot of open bracket
+        self._depth = 0                # tracking() reentrancy depth
+        self._quantum = _encode_quantum()
+        self.checks = 0  # fingerprint/launch/ledger checks performed
+
+    # ------------------------------------------------- launch attribution --
+    @contextlib.contextmanager
+    def tracking(self):
+        """Attribute LAUNCHES deltas inside this bracket to the store.
+
+        Store code wraps every path that dispatches device work (window
+        begin/finish, batch get, repair recode) in one of these; traffic
+        from other stores between brackets is invisible to the model.
+        Reentrant: nested brackets fold into the outermost one.
+        """
+        if self._depth == 0:
+            self._mark = LAUNCHES.snapshot()
+        self._depth += 1
+        try:
+            yield
+        finally:
+            self._depth -= 1
+            if self._depth == 0:
+                d = LAUNCHES.delta(self._mark)
+                for fam in _FAMILIES:
+                    setattr(self._seen, fam,
+                            getattr(self._seen, fam) + getattr(d, fam))
+                self._mark = None
+
+    def track(self, fn: Callable, *args, **kwargs):
+        """Run ``fn`` under a :meth:`tracking` bracket."""
+        with self.tracking():
+            return fn(*args, **kwargs)
+
+    def _observed(self) -> LaunchCounter:
+        """Attributed launches, including any still-open bracket."""
+        out = LaunchCounter()
+        live = (LAUNCHES.delta(self._mark) if self._depth else None)
+        for fam in _FAMILIES:
+            setattr(out, fam, getattr(self._seen, fam)
+                    + (getattr(live, fam) if live else 0))
+        return out
+
+    # ------------------------------------------------------ begin purity --
+    def fingerprint(self) -> str:
+        """Digest of all control-plane state a begin phase must not touch."""
+        st = self.store
+        h = hashlib.sha1()
+
+        def feed(*parts) -> None:
+            for p in parts:
+                h.update(repr(p).encode())
+                h.update(b";")
+
+        for cid, copies in st.index._chunks.items():
+            for cl, info in copies.items():
+                feed(cid, cl, info.length, info.refcount)
+        for user, sw in st.switching.items():
+            for fname, meta in sw.table.items():
+                feed(user, fname, meta.timestamp, meta.entries,
+                     meta.lengths, meta.storage_class)
+        for c in st.clusters:
+            feed(c.cluster_id, c._reserved)
+            for node in c.nodes:
+                feed(node.node_id, node.alive, node.used,
+                     len(node._pieces))
+        for name, b in st._bindings.items():
+            feed(name, sorted(getattr(b, "_bound", {}).items()),
+                 getattr(b, "_next", 0))
+        feed(sorted(st._logical.items()), sorted(st._nfiles.items()),
+             sorted(st.repair._pending.keys()))
+        return h.hexdigest()
+
+    def guard_begin(self, label: str, fn: Callable, *args, **kwargs):
+        before = self.fingerprint()
+        out = self.track(fn, *args, **kwargs)
+        after = self.fingerprint()
+        self.checks += 1
+        if before != after:
+            raise SanitizerError(
+                f"begin-phase `{label}` mutated control-plane state "
+                "(index/meta/cluster/binding/repair); begin seams must "
+                "be pure for pipelined windows to stay byte-identical "
+                "to sequential")
+        return out
+
+    # ----------------------------------------------- expected-launch model --
+    def add_budget(self, gf: int = 0, sha1: int = 0, gear: int = 0,
+                   fused: int = 0) -> None:
+        self._budget.gf += gf
+        self._budget.sha1 += sha1
+        self._budget.gear += gear
+        self._budget.fused += fused
+
+    def add_put_budget(self, codes, chunks, engine) -> None:
+        """Budget one put window's hash + encode launches.
+
+        ``codes``/``chunks`` are the window's per-chunk code objects and
+        chunk bytes (parallel lists, before dedup — dedup only shrinks
+        the real launch count).
+        """
+        n = len(chunks)
+        hash_batch = int(getattr(engine, "hash_batch", 512)) or 512
+        buckets = {
+            (code.n, code.k,
+             -(-code.piece_len(len(blob)) // self._quantum))
+            for code, blob in zip(codes, chunks)}
+        if getattr(engine, "supports_fused_ingest", False):
+            self.add_budget(fused=len(buckets))
+        else:
+            self.add_budget(sha1=-(-n // hash_batch) if n else 0,
+                            gf=len(buckets))
+
+    def check_launches(self, label: str) -> None:
+        seen = self._observed()
+        self.checks += 1
+        for fam in _FAMILIES:
+            got, allowed = getattr(seen, fam), getattr(self._budget, fam)
+            if got > allowed:
+                raise SanitizerError(
+                    f"launch model violated after {label}: this store "
+                    f"dispatched {got} LAUNCHES.{fam} but the expected-"
+                    f"launch model allows {allowed}; a data-plane path "
+                    "is dispatching per-item instead of per-bucket")
+
+    def resync(self) -> None:
+        """Zero the attributed-launch ledger and its budget."""
+        self._seen = LaunchCounter()
+        self._budget = LaunchCounter()
+
+    # -------------------------------------------------- ledger conservation --
+    def check_ledger(self) -> None:
+        st = self.store
+        expected: dict[tuple[bytes, int], int] = {}
+        for user, sw in st.switching.items():
+            for fname, meta in sw.table.items():
+                for key in set(meta.entries):
+                    expected[key] = expected.get(key, 0) + 1
+        recorded: dict[tuple[bytes, int], int] = {}
+        for cid, copies in st.index._chunks.items():
+            for cl, info in copies.items():
+                recorded[(cid, cl)] = info.refcount
+        if expected != recorded:
+            extra = {k: v for k, v in recorded.items()
+                     if expected.get(k) != v}
+            missing = {k: v for k, v in expected.items()
+                       if k not in recorded}
+            raise SanitizerError(
+                "piece ledger out of conservation: refcounts disagree "
+                f"with live file metadata ({len(extra)} record(s) with "
+                f"wrong/unreferenced counts, {len(missing)} referenced "
+                "but unrecorded)")
+        for c in st.clusters:
+            for node in c.nodes:
+                for cid, idx in node._pieces:
+                    if idx != node.node_id:
+                        raise SanitizerError(
+                            f"piece slot invariant broken: node "
+                            f"{node.node_id} of cluster {c.cluster_id} "
+                            f"holds piece index {idx}")
+                    if (cid, c.cluster_id) not in recorded:
+                        raise SanitizerError(
+                            f"orphan piece: cluster {c.cluster_id} node "
+                            f"{node.node_id} holds a piece of chunk "
+                            f"{cid.hex()} with no live index record")
+        self.checks += 1
+
+    def check_window(self, label: str) -> None:
+        self.check_launches(label)
+        self.check_ledger()

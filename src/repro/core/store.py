@@ -49,6 +49,7 @@ is stored, read back and decoded.
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 
 import numpy as np
@@ -63,6 +64,7 @@ from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
 from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
                                  UploadPlan)
 from repro.core.repair import RepairManager, RepairReport
+from repro.core.sanitizer import Sanitizer, SanitizerError  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -161,7 +163,8 @@ class SEARSStore:
                  latency: LatencyParams | None = None, seed: int = 0,
                  hash_fn=hashing.chunk_id,
                  engine: str | CodingEngine = "numpy",
-                 classes: list[StorageClass] | None = None) -> None:
+                 classes: list[StorageClass] | None = None,
+                 sanitize: bool | None = None) -> None:
         legacy = [kw for kw, v in (("n", n), ("k", k),
                                    ("binding", binding),
                                    ("chunker", chunker))
@@ -208,6 +211,11 @@ class SEARSStore:
         self.repair = RepairManager(self, sub_batch=self.REPAIR_BATCH)
         self._logical = {c.name: 0 for c in class_list}
         self._nfiles = {c.name: 0 for c in class_list}
+        # runtime sanitizer (begin purity, expected-launch model, piece
+        # ledger); default off, opt in per store or via SEARS_SANITIZE=1
+        if sanitize is None:
+            sanitize = os.environ.get("SEARS_SANITIZE", "") not in ("", "0")
+        self._sanitizer = Sanitizer(self) if sanitize else None
 
     # ---------------------------------------------- class/pool resolution --
     def _class(self, name: str | None) -> StorageClass:
@@ -383,7 +391,26 @@ class SEARSStore:
         sequential equivalence is preserved because all dedup/placement
         decisions happen at finish time, in window order.  On the kernel
         engines the returned state holds an in-flight device gear launch.
+
+        With the sanitizer on, the begin runs under a control-plane
+        fingerprint guard (it must not mutate store state) and the
+        window's gear budget — one launch per distinct chunker — is
+        recorded up front, before the launch it covers is issued.
         """
+        san = self._sanitizer
+        if san is None:
+            return self._put_window_begin_impl(requests)
+        chunkers = set()
+        for req in requests:
+            try:
+                chunkers.add(self._class(req.storage_class).chunker)
+            except KeyError:
+                pass  # the impl fails this request; it chunks nothing
+        san.add_budget(gear=len(chunkers))
+        return san.guard_begin("_put_window_begin",
+                               self._put_window_begin_impl, requests)
+
+    def _put_window_begin_impl(self, requests) -> "PutWindowState":
         validated: list[list[tuple[str, bytes, np.ndarray]]] = []
         req_cls: list[StorageClass | None] = []
         for req in requests:
@@ -412,7 +439,18 @@ class SEARSStore:
                               req_cls=req_cls, pending=pending, error=error)
 
     def _put_window_finish(self, state: "PutWindowState") -> None:
-        """Resolve an issued put window: hash/encode, plan, land pieces."""
+        """Resolve an issued put window: hash/encode, plan, land pieces.
+
+        With the sanitizer on, the whole finish runs under a launch-
+        attribution bracket: the hash/encode dispatches it issues are
+        charged to this store's expected-launch ledger.
+        """
+        if self._sanitizer is None:
+            return self._put_window_finish_impl(state)
+        with self._sanitizer.tracking():
+            return self._put_window_finish_impl(state)
+
+    def _put_window_finish_impl(self, state: "PutWindowState") -> None:
         requests, validated = state.requests, state.validated
         req_cls = state.req_cls
         try:
@@ -444,6 +482,12 @@ class SEARSStore:
                 all_chunks.extend(chunks)
                 all_codes.extend([cls.code] * len(chunks))
             chunked.append(out)
+
+        if self._sanitizer is not None:
+            # hash + encode budget from the pre-dedup chunk list (dedup
+            # only shrinks the real launch count below the model)
+            self._sanitizer.add_put_budget(all_codes, all_chunks,
+                                           self.engine)
 
         # hashing -- on a fused engine the window's chunks are hashed AND
         # speculatively RS-encoded in the same device residency (one
@@ -533,6 +577,9 @@ class SEARSStore:
                                 for t in p.encode_tasks))
                 for p in plans]
             req.status = "done"
+
+        if self._sanitizer is not None:
+            self._sanitizer.check_window("put window")
 
     def _rollback_files(self, user: str, plans: list[UploadPlan]) -> None:
         """Drop the metadata of planned files after a failure.
@@ -797,9 +844,18 @@ class SEARSStore:
         for p in plans:
             for t in p.fetch_tasks:
                 uniq.setdefault((t.chunk_id, t.cluster_id), t)
-        token = self.engine.decode_blobs_multi_begin(
-            [(self.clusters[t.cluster_id].code, t.pieces, t.length)
-             for t in uniq.values()])
+        jobs = [(self.clusters[t.cluster_id].code, t.pieces, t.length)
+                for t in uniq.values()]
+        if self._sanitizer is not None:
+            # at most one GF decode launch per unique chunk (bucketing
+            # merges same-(code, length) jobs below this bound); the
+            # engine begin itself must not touch store state
+            self._sanitizer.add_budget(gf=len(jobs))
+            token = self._sanitizer.guard_begin(
+                "decode_blobs_multi_begin",
+                self.engine.decode_blobs_multi_begin, jobs)
+        else:
+            token = self.engine.decode_blobs_multi_begin(jobs)
         return (plans, list(uniq), token)
 
     def _get_window_finish(self, state, rho_fn
@@ -808,11 +864,14 @@ class SEARSStore:
         plans, keys, token = state
         blobs = self.engine.decode_blobs_multi_finish(token)
         blob_by_key = dict(zip(keys, blobs))
-        return [self._assemble(
+        out = [self._assemble(
             plan,
             {t.chunk_id: blob_by_key[(t.chunk_id, t.cluster_id)]
              for t in plan.fetch_tasks},
             rho_fn) for plan in plans]
+        if self._sanitizer is not None:
+            self._sanitizer.check_launches("get window")
+        return out
 
     def _batch_get(self, requests) -> None:
         """Shared get window: coalesce many requests' reads and decodes.
@@ -890,10 +949,17 @@ class SEARSStore:
             for p in plans_by_req[req.request_id]:
                 for t in p.fetch_tasks:
                     uniq.setdefault((t.chunk_id, t.cluster_id), t)
+        jobs = [(self.clusters[t.cluster_id].code, t.pieces, t.length)
+                for t in uniq.values()]
         try:
-            blobs = self.engine.decode_blobs_multi(
-                [(self.clusters[t.cluster_id].code, t.pieces, t.length)
-                 for t in uniq.values()])
+            if self._sanitizer is not None:
+                # same decode model as _get_window_begin: one GF launch
+                # per unique chunk is the ceiling, bucketing stays below
+                self._sanitizer.add_budget(gf=len(jobs))
+                blobs = self._sanitizer.track(
+                    self.engine.decode_blobs_multi, jobs)
+            else:
+                blobs = self.engine.decode_blobs_multi(jobs)
         except Exception as exc:
             for req in live:
                 req.status, req.error = "failed", exc
@@ -914,6 +980,9 @@ class SEARSStore:
                 continue
             req.result = out
             req.status = "done"
+
+        if self._sanitizer is not None:
+            self._sanitizer.check_launches("get window")
 
     def _plan_get(self, user: str, filename: str,
                   local_chunk_ids: set[bytes] | None,

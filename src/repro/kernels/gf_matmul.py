@@ -26,6 +26,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import gf256
+from repro.kernels.launches import TRACES
 
 TILE_L = 512  # bytes of piece per grid cell; VMEM ~ 8k*TILE_L*4B
 
@@ -49,6 +50,7 @@ def _kernel(gbits_ref, d_ref, out_ref, *, k: int, r: int):
 def _gf_matmul_padded(gbits: jnp.ndarray, data: jnp.ndarray,
                       interpret: bool = True) -> jnp.ndarray:
     """gbits: (8r, 8k) f32; data: (B, k, L) uint8 with L % TILE_L == 0."""
+    TRACES.gf += 1  # trace-time only: one increment per compiled shape
     B, k, L = data.shape
     r = gbits.shape[0] // 8
     grid = (B, L // TILE_L)

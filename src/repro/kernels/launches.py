@@ -44,3 +44,26 @@ LAUNCHES = LaunchCounter()
 # is a jit-cache miss (the retrace bug the bucketed padding fixes).  One
 # increment per (function, shape) compilation, not per call.
 TRACES = LaunchCounter()
+
+
+def reset_all() -> None:
+    """Zero both counter families together.
+
+    Resetting only one family skews any assertion that reads a launch
+    delta against a trace count from an earlier phase (or vice versa),
+    so benches and tests go through this instead of ``LAUNCHES.reset()``
+    — the ``counter-family-reset`` lint rule enforces it.
+    """
+    LAUNCHES.reset()
+    TRACES.reset()
+
+
+def snapshot_all() -> dict[str, LaunchCounter]:
+    """Point-in-time snapshot of both families, keyed 'launches'/'traces'."""
+    return {"launches": LAUNCHES.snapshot(), "traces": TRACES.snapshot()}
+
+
+def delta_all(since: dict[str, LaunchCounter]) -> dict[str, LaunchCounter]:
+    """Per-family deltas against a :func:`snapshot_all` result."""
+    return {"launches": LAUNCHES.delta(since["launches"]),
+            "traces": TRACES.delta(since["traces"])}

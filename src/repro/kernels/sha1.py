@@ -21,6 +21,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.hashing import SHA1_H0, SHA1_K
+from repro.kernels.launches import TRACES
 
 TILE_B = 128  # messages per grid cell
 
@@ -70,6 +71,7 @@ def _kernel(blocks_ref, counts_ref, out_ref, *, n_blocks: int):
 @functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def _sha1_padded(blocks: jnp.ndarray, counts: jnp.ndarray,
                  interpret: bool = True, tile: int = TILE_B) -> jnp.ndarray:
+    TRACES.sha1 += 1  # trace-time only: one increment per compiled shape
     B, M, _ = blocks.shape
     grid = (B // tile,)
     return pl.pallas_call(

@@ -1,0 +1,37 @@
+"""searslint — invariant static analysis for the SEARS storage core.
+
+Four passes (see each module's docstring): begin-purity, dispatch
+hygiene, counter coverage, plan determinism.  Run as
+
+    python -m repro.lint src/ tests/ benchmarks/
+
+Waive a finding with ``# searslint: ignore[rule] -- reason`` on the
+finding's line or the line above; a waiver without a reason is itself a
+``bad-waiver`` finding.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+from repro.lint import begin_purity, counters, determinism, dispatch
+from repro.lint.core import (Finding, Module, Program, load_paths,
+                             module_from_source, waiver_findings)
+
+ALL_PASSES = (begin_purity, dispatch, counters, determinism)
+
+__all__ = ["Finding", "Module", "Program", "ALL_PASSES", "load_paths",
+           "module_from_source", "run_program", "run_paths"]
+
+
+def run_program(program: Program) -> list[Finding]:
+    findings: list[Finding] = []
+    for pass_mod in ALL_PASSES:
+        findings.extend(pass_mod.run(program))
+    findings.extend(waiver_findings(program, findings))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def run_paths(paths: list[str | pathlib.Path]) -> list[Finding]:
+    return run_program(Program(load_paths(paths)))

@@ -1,0 +1,396 @@
+"""searslint core: module loading, findings, waivers, call-graph utilities.
+
+The four passes (begin-purity, dispatch hygiene, counter coverage, plan
+determinism) share one cross-module view of the tree built here:
+
+- ``Module``: one parsed source file with its waiver comments.
+- ``FuncInfo``: one top-level function or one-level class method, with
+  jit markers resolved (decorator ``@jax.jit`` / ``@functools.partial(
+  jax.jit, ...)`` and module-level ``name = jax.jit(fn)`` aliases).
+- ``Program``: the loaded module set plus name-resolution indexes.
+
+Resolution is deliberately storage-scoped: passes that reason about the
+data plane only look at modules under ``src/repro/core`` and
+``src/repro/kernels`` even when tests/benchmarks are also on the command
+line, so test helpers exercising kernels directly don't poison coverage
+or purity verdicts.
+
+Waivers: ``# searslint: ignore[rule]`` (comma-separated rules) on the
+finding's line or the line directly above suppresses it; the comment
+must carry a reason after the bracket or it is itself reported as a
+``bad-waiver`` finding.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+
+WAIVER_RE = re.compile(r"#\s*searslint:\s*ignore\[([a-zA-Z0-9_,\- ]+)\]\s*(.*)")
+
+JIT_NAMES = {"jax.jit", "jit"}
+PARTIAL_NAMES = {"functools.partial", "partial"}
+MEMO_NAMES = {"functools.lru_cache", "lru_cache", "functools.cache", "cache"}
+
+STORAGE_DIRS = ("core", "kernels")
+
+
+@dataclasses.dataclass
+class Finding:
+    path: str
+    line: int
+    rule: str
+    message: str
+    waived: bool = False
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    path: pathlib.Path
+    stem: str
+    tree: ast.Module
+    lines: list[str]
+    waivers: dict[int, set[str]]          # 1-based line -> waived rules
+    bad_waiver_lines: list[int]           # waivers missing a reason
+    imports: dict[str, str]               # local alias -> module stem
+
+    @property
+    def is_storage(self) -> bool:
+        parts = self.path.parts
+        return ("repro" in parts and len(parts) >= 2
+                and self.path.parent.name in STORAGE_DIRS)
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    module: Module
+    name: str
+    qualname: str
+    node: ast.AST                         # FunctionDef / AsyncFunctionDef
+    cls: str | None = None
+    jitted: bool = False                  # body is traced under jax.jit
+    memoized: bool = False                # lru_cache'd (compiles/builds once)
+
+
+def dotted(node: ast.AST) -> str | None:
+    """'jax.jit' for Attribute chains, 'f' for Names, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> str | None:
+    """Base Name of an Attribute/Subscript/Call chain ('self.x[i]' -> 'self')."""
+    while True:
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            return node.id
+        else:
+            return None
+
+
+def local_names(fn: ast.AST) -> set[str]:
+    """Names bound inside a function: params, assignments, loop/with/
+    comprehension targets, walrus bindings, and nested lambda/def params."""
+    out: set[str] = set()
+
+    def add_args(a: ast.arguments) -> None:
+        for grp in (a.posonlyargs, a.args, a.kwonlyargs):
+            for arg in grp:
+                out.add(arg.arg)
+        if a.vararg:
+            out.add(a.vararg.arg)
+        if a.kwarg:
+            out.add(a.kwarg.arg)
+
+    def add_target(t: ast.AST) -> None:
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for el in t.elts:
+                add_target(el)
+        elif isinstance(t, ast.Starred):
+            add_target(t.value)
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            add_args(node.args)
+            if not isinstance(node, ast.Lambda):
+                out.add(getattr(node, "name", ""))
+        elif isinstance(node, (ast.Assign, ast.For, ast.AsyncFor)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for t in targets:
+                add_target(t)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            add_target(node.target)
+        elif isinstance(node, ast.NamedExpr):
+            add_target(node.target)
+        elif isinstance(node, ast.comprehension):
+            add_target(node.target)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            add_target(node.optional_vars)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            out.add(node.name)
+    return out
+
+
+def jit_call_target(call: ast.Call) -> ast.AST | bool | None:
+    """For ``jax.jit(expr, ...)`` return ``expr``; for
+    ``functools.partial(jax.jit, ...)`` return True; else None."""
+    name = dotted(call.func)
+    if name in JIT_NAMES:
+        return call.args[0] if call.args else True
+    if name in PARTIAL_NAMES and call.args and dotted(call.args[0]) in JIT_NAMES:
+        return True
+    return None
+
+
+def is_jit_decorated(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        if dotted(dec) in JIT_NAMES:
+            return True
+        if isinstance(dec, ast.Call) and jit_call_target(dec) is not None:
+            return True
+    return False
+
+
+def is_memo_decorated(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        if dotted(dec) in MEMO_NAMES:
+            return True
+        if isinstance(dec, ast.Call) and dotted(dec.func) in MEMO_NAMES:
+            return True
+    return False
+
+
+def has_counter_increment(fn: ast.AST, family: str) -> bool:
+    """True if the body contains ``<family>.<kind> += n`` (family is the
+    root name, e.g. 'LAUNCHES' or 'TRACES')."""
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.AugAssign)
+                and isinstance(node.target, ast.Attribute)
+                and root_name(node.target) == family):
+            return True
+    return False
+
+
+def calls_in(fn: ast.AST) -> list[ast.Call]:
+    return [n for n in ast.walk(fn) if isinstance(n, ast.Call)]
+
+
+def _parse_waivers(lines: list[str]) -> tuple[dict[int, set[str]], list[int]]:
+    waivers: dict[int, set[str]] = {}
+    bad: list[int] = []
+    for i, ln in enumerate(lines, start=1):
+        m = WAIVER_RE.search(ln)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = m.group(2).strip().lstrip("-— ").strip()
+        if not reason:
+            bad.append(i)
+        waivers[i] = rules
+    return waivers, bad
+
+
+def _collect_imports(tree: ast.Module) -> dict[str, str]:
+    """alias -> module stem, from Import/ImportFrom anywhere in the file."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                stem = alias.name.split(".")[-1]
+                out[alias.asname or alias.name.split(".")[0]] = (
+                    stem if alias.asname else alias.name.split(".")[0])
+                if alias.asname:
+                    out[alias.asname] = stem
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = alias.name
+    return out
+
+
+def module_from_source(source: str, path: str | pathlib.Path) -> Module:
+    path = pathlib.Path(path)
+    tree = ast.parse(source, filename=str(path))
+    lines = source.splitlines()
+    waivers, bad = _parse_waivers(lines)
+    return Module(path=path, stem=path.stem, tree=tree, lines=lines,
+                  waivers=waivers, bad_waiver_lines=bad,
+                  imports=_collect_imports(tree))
+
+
+def load_paths(paths: list[str | pathlib.Path]) -> list[Module]:
+    files: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    mods = []
+    seen: set[pathlib.Path] = set()
+    for f in files:
+        if f in seen:
+            continue
+        seen.add(f)
+        mods.append(module_from_source(f.read_text(), f))
+    return mods
+
+
+class Program:
+    """Cross-module index over a loaded module set."""
+
+    def __init__(self, modules: list[Module]):
+        self.modules = modules
+        self.by_path = {str(m.path): m for m in modules}
+        self.storage_modules = [m for m in modules if m.is_storage]
+        self.module_by_stem: dict[str, Module] = {}
+        for m in self.storage_modules:
+            self.module_by_stem.setdefault(m.stem, m)
+
+        self.funcs: list[FuncInfo] = []
+        self._by_module: dict[int, dict[str, list[FuncInfo]]] = {}
+        self._by_name: dict[str, list[FuncInfo]] = {}
+        # module-level ``alias = jax.jit(target)`` assignments:
+        # (module id, alias name) -> (target FuncInfo | None, assign lineno)
+        self.jit_aliases: dict[tuple[int, str], tuple[FuncInfo | None, int, ast.AST | None]] = {}
+
+        for mod in modules:
+            table: dict[str, list[FuncInfo]] = {}
+            self._by_module[id(mod)] = table
+            for node in mod.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._add_func(mod, node, None, table)
+                elif isinstance(node, ast.ClassDef):
+                    for sub in node.body:
+                        if isinstance(sub, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef)):
+                            self._add_func(mod, sub, node.name, table)
+        # second pass: module-level jit aliases may target functions in
+        # any loaded module, so resolve after all tables exist
+        for mod in modules:
+            for node in mod.tree.body:
+                if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and isinstance(node.value, ast.Call)):
+                    continue
+                target = jit_call_target(node.value)
+                if target is None or target is True:
+                    continue
+                alias = node.targets[0].id
+                fi = self._resolve_dotted(mod, dotted(target))
+                if fi is not None:
+                    fi.jitted = True
+                self.jit_aliases[(id(mod), alias)] = (fi, node.lineno, target)
+        self.node_owner: dict[int, FuncInfo] = {}
+        for fi in self.funcs:
+            for sub in ast.walk(fi.node):
+                self.node_owner.setdefault(id(sub), fi)
+
+    def _add_func(self, mod: Module, node: ast.AST, cls: str | None,
+                  table: dict[str, list[FuncInfo]]) -> None:
+        fi = FuncInfo(module=mod, name=node.name, cls=cls,
+                      qualname=f"{cls}.{node.name}" if cls else node.name,
+                      node=node, jitted=is_jit_decorated(node),
+                      memoized=is_memo_decorated(node))
+        self.funcs.append(fi)
+        table.setdefault(node.name, []).append(fi)
+        if mod.is_storage:
+            self._by_name.setdefault(node.name, []).append(fi)
+
+    def _resolve_dotted(self, mod: Module, name: str | None) -> FuncInfo | None:
+        """Resolve 'f' / 'pkgalias.f' to a single FuncInfo, else None."""
+        if not name:
+            return None
+        parts = name.split(".")
+        if len(parts) == 1:
+            hits = self._by_module[id(mod)].get(parts[0], [])
+            top = [f for f in hits if f.cls is None]
+            return top[0] if top else None
+        if len(parts) == 2:
+            stem = mod.imports.get(parts[0])
+            other = self.module_by_stem.get(stem or parts[0])
+            if other is not None:
+                hits = self._by_module[id(other)].get(parts[1], [])
+                top = [f for f in hits if f.cls is None]
+                return top[0] if top else None
+        return None
+
+    def functions_in(self, mod: Module) -> list[FuncInfo]:
+        return [f for fs in self._by_module[id(mod)].values() for f in fs]
+
+    def storage_funcs(self) -> list[FuncInfo]:
+        return [f for f in self.funcs if f.module.is_storage]
+
+    def storage_funcs_named(self, name: str) -> list[FuncInfo]:
+        return self._by_name.get(name, [])
+
+    def resolve_call(self, mod: Module, call: ast.Call) -> list[FuncInfo]:
+        """Resolve a call site to candidate FuncInfos within the storage
+        module set.  'self.f'/'cls.f' and unknown receivers resolve by
+        bare method name across all storage classes (over-approximation
+        suited to invariant checking)."""
+        name = dotted(call.func)
+        if not name:
+            return []
+        parts = name.split(".")
+        if len(parts) == 1:
+            direct = self._resolve_dotted(mod, name)
+            if direct is not None:
+                return [direct]
+            ali = self.jit_aliases.get((id(mod), name))
+            if ali is not None and ali[0] is not None:
+                return [ali[0]]
+            return []
+        direct = self._resolve_dotted(mod, name)
+        if direct is not None:
+            return [direct]
+        # receiver is an object (self.engine.f, cluster.f, ...):
+        # match any storage-class method with that name
+        return [f for f in self._by_name.get(parts[-1], []) if f.cls]
+
+    def enclosing_func(self, node: ast.AST) -> FuncInfo | None:
+        return self.node_owner.get(id(node))
+
+    def is_jitted_callable(self, mod: Module, name: str) -> bool:
+        """True if ``name(...)`` in ``mod`` dispatches a traced function
+        (the name is a module-level jit alias or a jitted def)."""
+        if (id(mod), name) in self.jit_aliases:
+            return True
+        fi = self._resolve_dotted(mod, name)
+        return fi is not None and fi.jitted
+
+
+def waiver_findings(program: Program, findings: list[Finding]) -> list[Finding]:
+    """Mark waived findings in place; return bad-waiver findings."""
+    for f in findings:
+        mod = program.by_path.get(f.path)
+        if mod is None:
+            continue
+        for line in (f.line, f.line - 1):
+            if f.rule in mod.waivers.get(line, set()):
+                f.waived = True
+                break
+    out = []
+    for mod in program.modules:
+        for line in mod.bad_waiver_lines:
+            out.append(Finding(
+                path=str(mod.path), line=line, rule="bad-waiver",
+                message="searslint waiver has no reason; write "
+                        "'# searslint: ignore[rule] -- why it is safe'"))
+    return out

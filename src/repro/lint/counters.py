@@ -1,0 +1,187 @@
+"""Pass 3 — counter coverage.
+
+The CI dispatch-regression lane asserts ``LAUNCHES``/``TRACES`` deltas;
+it is silently blind to any device dispatch that forgets its increment.
+Three rules:
+
+- ``counter-launch``: a function in ``kernels/ops.py``/``gear_cdc.py``
+  that dispatches a launch root (a jitted function, jit alias, or
+  ``pallas_call`` wrapper) must increment ``LAUNCHES.<kind>`` itself —
+  or every storage call site of it must sit inside a function that
+  does (or inside a traced function, where the dispatch is part of an
+  already-counted launch).
+- ``counter-trace``: every traced function (jit decorator or module
+  level ``name = jax.jit(fn)``) in the kernel modules must increment
+  ``TRACES.<kind>`` in its traced body, so retrace regressions are
+  observable.
+- ``counter-family-reset``: outside ``launches.py`` nothing may call
+  ``LAUNCHES.reset()`` / ``TRACES.reset()`` directly — resetting one
+  family while a bench/test reads the other skews cross-family
+  assertions; use ``launches.reset_all()``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.lint.core import (Finding, FuncInfo, Module, Program, dotted,
+                             has_counter_increment)
+
+LAUNCH_RULE = "counter-launch"
+TRACE_RULE = "counter-trace"
+RESET_RULE = "counter-family-reset"
+
+REPORT_STEMS = {"ops", "gear_cdc"}
+TRACE_STEMS = {"ops", "gear_cdc", "gf_matmul", "sha1"}
+KERNEL_STEMS = TRACE_STEMS | {"ref", "flash_attn"}
+
+
+def _calls_pallas(fn: FuncInfo) -> bool:
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            name = dotted(node.func)
+            if name and name.split(".")[-1] == "pallas_call":
+                return True
+    return False
+
+
+def _direct_callees(program: Program, fn: FuncInfo,
+                    universe: set[int]) -> list[FuncInfo]:
+    out = []
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            for callee in program.resolve_call(fn.module, node):
+                if id(callee) in universe:
+                    out.append(callee)
+            name = dotted(node.func)
+            if name and "." not in name:
+                ali = program.jit_aliases.get((id(fn.module), name))
+                if ali is not None and ali[0] is not None:
+                    out.append(ali[0])
+    return out
+
+
+def _call_sites(program: Program, fn: FuncInfo) -> list[FuncInfo | None]:
+    """Enclosing functions of every storage call site of ``fn``
+    (None = module level)."""
+    sites: list[FuncInfo | None] = []
+    for m in program.storage_modules:
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted(node.func)
+            if not name or name.split(".")[-1] != fn.name:
+                continue
+            if "." in name:
+                stem = m.imports.get(name.split(".")[0])
+                if m is not fn.module and stem != fn.module.stem:
+                    continue
+                if m is fn.module and stem not in (None, fn.module.stem):
+                    continue
+            elif m is not fn.module:
+                continue
+            sites.append(program.enclosing_func(node))
+    return sites
+
+
+def run(program: Program) -> list[Finding]:
+    findings: list[Finding] = []
+
+    kfuncs = [f for f in program.storage_funcs()
+              if f.module.stem in KERNEL_STEMS]
+    universe = {id(f) for f in kfuncs}
+    roots = {id(f) for f in kfuncs if f.jitted or _calls_pallas(f)}
+    counted = {id(f) for f in kfuncs
+               if has_counter_increment(f.node, "LAUNCHES")}
+
+    # a function "dispatches" if — itself uncounted and untraced — it
+    # directly calls a launch root or another dispatching function
+    callees = {id(f): _direct_callees(program, f, universe) for f in kfuncs}
+    dispatching: set[int] = set()
+    changed = True
+    while changed:
+        changed = False
+        for f in kfuncs:
+            if id(f) in dispatching or id(f) in roots or id(f) in counted:
+                continue
+            if any(id(c) in roots or id(c) in dispatching
+                   for c in callees[id(f)]):
+                dispatching.add(id(f))
+                changed = True
+
+    # a dispatching function is covered if every storage call site sits
+    # inside a counted, traced, or covered function (and it has >= 1 site)
+    covered: set[int] = set()
+    by_id = {id(f): f for f in kfuncs}
+    changed = True
+    while changed:
+        changed = False
+        for fid in dispatching - covered:
+            sites = _call_sites(program, by_id[fid])
+            ok = bool(sites)
+            for owner in sites:
+                if owner is None:
+                    ok = False
+                    break
+                oid = id(owner)
+                if oid in counted or owner.jitted or oid in covered:
+                    continue
+                ok = False
+                break
+            if ok:
+                covered.add(fid)
+                changed = True
+
+    for fid in sorted(dispatching - covered,
+                      key=lambda i: (str(by_id[i].module.path),
+                                     by_id[i].node.lineno)):
+        f = by_id[fid]
+        if f.module.stem not in REPORT_STEMS:
+            continue
+        findings.append(Finding(
+            path=str(f.module.path), line=f.node.lineno, rule=LAUNCH_RULE,
+            message=f"`{f.qualname}` dispatches a device launch but "
+                    "neither it nor all of its call sites increment "
+                    "`LAUNCHES.<kind>`"))
+
+    # counter-trace: traced bodies must count their own retraces
+    for f in kfuncs:
+        if (f.jitted and f.module.stem in TRACE_STEMS
+                and not has_counter_increment(f.node, "TRACES")):
+            findings.append(Finding(
+                path=str(f.module.path), line=f.node.lineno,
+                rule=TRACE_RULE,
+                message=f"traced function `{f.qualname}` does not "
+                        "increment `TRACES.<kind>` in its traced body"))
+    # module-level jit aliases whose target is out of reach (lambda or
+    # cross-module function) still need a counted traced body
+    for (mid, alias), (target, lineno, expr) in program.jit_aliases.items():
+        mod = next((m for m in program.modules if id(m) == mid), None)
+        if mod is None or mod.stem not in TRACE_STEMS or not mod.is_storage:
+            continue
+        if target is not None and target.module is mod:
+            continue  # the def-site rule above already covers it
+        body_ok = (target is not None
+                   and has_counter_increment(target.node, "TRACES"))
+        if expr is not None and isinstance(expr, ast.Lambda):
+            body_ok = False  # a lambda body cannot hold an increment
+        if not body_ok:
+            findings.append(Finding(
+                path=str(mod.path), line=lineno, rule=TRACE_RULE,
+                message=f"jit alias `{alias}` traces a body with no "
+                        "`TRACES.<kind>` increment; wrap the target in a "
+                        "local counted function"))
+
+    # counter-family-reset: scans the full module set (tests/benchmarks)
+    for mod in program.modules:
+        if mod.stem == "launches":
+            continue
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and dotted(node.func) in (
+                    "LAUNCHES.reset", "TRACES.reset"):
+                findings.append(Finding(
+                    path=str(mod.path), line=node.lineno, rule=RESET_RULE,
+                    message=f"`{dotted(node.func)}()` resets one counter "
+                            "family; use `launches.reset_all()` so "
+                            "LAUNCHES and TRACES stay in step"))
+    return findings

@@ -326,19 +326,22 @@ def test_gear_stream_launches_do_not_retrace_across_sizes():
     """
     from repro.kernels import ops
     from repro.kernels.gear_cdc import bucket_len
-    from repro.kernels.launches import LAUNCHES, TRACES
+    from repro.kernels.launches import TRACES, delta_all, snapshot_all
 
     rng = np.random.default_rng(60)
     sizes = [1, 100, 8192, 8193, 10_000, 12_345, 16_384, 20_000, 30_000,
              33_000, 40_000, 65_000]
     buckets = {bucket_len(n) for n in sizes}
-    l0, t0 = LAUNCHES.snapshot(), TRACES.snapshot()
+    # both families in one snapshot: launch deltas and trace deltas below
+    # are guaranteed to cover the same interval
+    s0 = snapshot_all()
     for n in sizes:
         data = rng.integers(0, 256, size=n, dtype=np.int64).astype(np.uint8)
         h = ops.gear_hash_stream(data, impl="ref")
         assert h.shape == (n,)
-    assert LAUNCHES.delta(l0).gear == len(sizes)  # every call dispatches...
-    assert TRACES.delta(t0).gear <= len(buckets)  # ...few shapes compile
+    d = delta_all(s0)
+    assert d["launches"].gear == len(sizes)  # every call dispatches...
+    assert d["traces"].gear <= len(buckets)  # ...few shapes compile
     # second sweep: zero new traces -- the cache is warm for every bucket
     t1 = TRACES.snapshot()
     for n in sizes:
