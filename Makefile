@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-slow test-fast test-launches lint bench bench-pipeline \
-	bench-smoke bench-repair bench-classes headline
+	bench-smoke bench-repair bench-disaster bench-classes headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -15,12 +15,13 @@ test-slow:
 
 # dispatch-regression lane (also a CI job): a put window must stay
 # O(1) gear + O(1) SHA-1 + O(buckets) GF launches with no gear retraces,
-# a storm repair pass must stay O(buckets) per sub-batch, not O(chunks),
-# and a mixed-storage-class window must stay O(code buckets x length
-# buckets), never O(files)
+# a storm repair pass must stay O(buckets) per sub-batch, not O(chunks)
+# (including whole-cluster re-placement drains and scrub sweeps), and a
+# mixed-storage-class window must stay O(code buckets x length buckets),
+# never O(files)
 test-launches:
 	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py \
-		tests/test_classes.py
+		tests/test_classes.py tests/test_disaster.py
 
 # searslint: begin-purity, dispatch hygiene, counter coverage, plan
 # determinism (exits 1 on any unwaivered finding)
@@ -32,6 +33,7 @@ test-fast:
 	$(PYTHON) -m pytest -x -q tests/test_store.py tests/test_engine.py \
 		tests/test_scheduler.py tests/test_ingest.py \
 		tests/test_repair.py tests/test_classes.py \
+		tests/test_disaster.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py \
 		tests/test_lint.py tests/test_sanitizer.py
@@ -45,15 +47,21 @@ bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
 
 # quick CI smoke: data-plane pipeline + cross-user scheduler + storm
-# repair + storage-class benchmarks (BENCH_pipeline.json +
-# BENCH_scheduler.json + BENCH_repair.json + BENCH_classes.json)
+# repair + disaster recovery + storage-class benchmarks
+# (BENCH_pipeline.json + BENCH_scheduler.json + BENCH_repair.json +
+# BENCH_disaster.json + BENCH_classes.json)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench,class_bench
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench,disaster_bench,class_bench
 
 # failure-storm repair: per-chunk vs batched cross-cluster rebuild on
 # both engines (BENCH_repair.json)
 bench-repair:
 	$(PYTHON) -m benchmarks.run --only repair_bench
+
+# disaster recovery: whole-cluster-loss rebuild throughput, scrub
+# overhead, and the repair-throttle SLO gate (BENCH_disaster.json)
+bench-disaster:
+	$(PYTHON) -m benchmarks.run --only disaster_bench
 
 # storage classes: realtime-vs-archival retrieval/overhead trade-off and
 # mixed-window launch economics on both engines (BENCH_classes.json)

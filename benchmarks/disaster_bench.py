@@ -1,0 +1,236 @@
+"""Disaster recovery: cluster-loss rebuild, scrub overhead, SLO throttling.
+
+Three measurement families for the disaster-recovery subsystem:
+
+* ``rebuild``  -- a whole cluster is declared lost and every chunk with a
+  surviving cross-cluster replica re-places onto a healthy pool cluster.
+  Records re-placed pieces/s and GF launch counts: re-placement rides the
+  same batched ``recode_blobs_multi`` seam as in-place repair, so a drain
+  costs O(code buckets x length buckets) launches, never O(chunks).
+* ``scrub``    -- timer-lane proactive sweeps over a healthy store.
+  Records censused chunks/s and pins the sweep at zero data-plane
+  launches (scrubbing is pure metadata).
+* ``slo``      -- foreground retrieval p50/p99 under three repair arms
+  driven by one deterministic fake clock: ``no_repair`` (baseline),
+  ``unthrottled`` (the whole lost cluster rebuilt in one burst; the
+  ``RepairBandwidth`` load model floors rho at its 0.95 congestion cap on
+  every cluster the burst touched) and ``throttled`` (a token-bucket
+  ``limit_bps`` spreads the same rebuild over many windows, so repair
+  utilisation -- and foreground latency -- stays bounded).
+
+Results land in ``BENCH_disaster.json``.  ``check()`` fails the run if
+throttled foreground p99 exceeds ``SLO_FACTOR`` x the no-repair baseline,
+if the unthrottled burst does NOT blow that budget (the throttle must be
+load-bearing), if a rebuild drain re-serializes into per-chunk launches,
+or if scrubbing dispatches any data-plane launch at all.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import make_store
+from repro.core.latency import RepairBandwidth
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_disaster.json")
+
+MAX_LAUNCHES_PER_SUB_BATCH = 16  # decode buckets + encode buckets bound
+SLO_FACTOR = 1.5        # throttled p99 must stay within this x baseline
+# link and budget are scaled to the bench dataset (a few hundred KB per
+# cluster copy) so an unthrottled whole-cluster rebuild genuinely
+# saturates its donor/target links inside one load window
+LINK_BPS = 200e3        # modeled inter-cluster link
+LIMIT_BPS = 20e3        # throttled arm's repair budget (10% of the link)
+
+
+def _launches():
+    from repro.kernels.launches import LAUNCHES
+    return LAUNCHES
+
+
+def _pctl(xs: list[float], q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(round(q * (len(ys) - 1))))]
+
+
+def _duplicated_store(engine: str, quick: bool, bandwidth=None,
+                      n_users: int = 4):
+    """ULB store where every user uploads the SAME files: each user's
+    copy lands on their own bound cluster, so a lost cluster always has
+    cross-cluster donor replicas to rebuild from."""
+    store = make_store("ulb", clusters=6, node_capacity=1 << 30,
+                       engine=engine)
+    if bandwidth is not None:
+        store.repair.bandwidth = bandwidth
+    n_files = 4 if quick else 8
+    kb = 48 if quick else 160
+    files = [(f"f{i}",
+              np.random.default_rng(31 + i).integers(
+                  0, 256, size=kb * 1024 + 512 * i,
+                  dtype=np.int64).astype(np.uint8).tobytes())
+             for i in range(n_files)]
+    for u in range(n_users):
+        store.put_files(f"user{u}", files)
+    return store, files
+
+
+def _bench_rebuild(engine: str, quick: bool) -> dict:
+    store, files = _duplicated_store(engine, quick)
+    lost_id = store.binding._bound["user0"]
+    queued = store.declare_cluster_lost(lost_id)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    report = store.repair.repair()
+    dt = time.perf_counter() - t0
+    gf = _launches().delta(before).gf
+    assert report.balanced, "rebuild ledger unbalanced"
+    assert len(report.replaced) == queued, "cluster loss left chunks behind"
+    assert not store.index.cluster_chunks(lost_id)
+    for fn, blob in files:
+        out, _ = store.get_file("user0", fn)
+        assert out == blob, f"re-placement corrupted {fn}"
+    return {
+        "name": f"disaster_rebuild/{engine}",
+        "engine": engine,
+        "n_chunks_replaced": len(report.replaced),
+        "pieces_replaced": report.pieces_replaced,
+        "n_sub_batches": report.n_sub_batches,
+        "gf_launches": gf,
+        "s": round(dt, 4),
+        "pieces_per_s": round(report.pieces_replaced / max(1e-9, dt), 1),
+        "identical_artifacts": True,
+    }
+
+
+def _bench_scrub(engine: str, quick: bool) -> dict:
+    store, _ = _duplicated_store(engine, quick)
+    total = sum(len(store.index.cluster_chunks(c.cluster_id))
+                for c in store.clusters)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    censused = 0
+    sweeps = 0
+    while censused < total:  # one full cursor revolution
+        censused += store.repair.scrub(budget=32).n_censused
+        sweeps += 1
+    dt = time.perf_counter() - t0
+    d = _launches().delta(before)
+    return {
+        "name": f"disaster_scrub/{engine}",
+        "engine": engine,
+        "n_chunks": total,
+        "n_sweeps": sweeps,
+        "chunks_per_s": round(censused / max(1e-9, dt), 1),
+        "s": round(dt, 5),
+        "launches": d.gf + d.sha1 + d.gear + d.fused,
+    }
+
+
+def _slo_arm(engine: str, quick: bool, arm: str) -> list[float]:
+    """Foreground retrieval times for one repair arm (fake clock)."""
+    now = [0.0]
+    bw = RepairBandwidth(
+        link_bps=LINK_BPS,
+        limit_bps=LIMIT_BPS if arm == "throttled" else None,
+        window_s=1.0, clock=lambda: now[0])
+    store, files = _duplicated_store(engine, quick, bandwidth=bw)
+    if arm != "no_repair":
+        store.declare_cluster_lost(store.binding._bound["user0"])
+        if arm == "unthrottled":
+            store.repair.repair()  # whole rebuild bursts into one window
+        else:
+            store.repair.repair()  # token bucket defers most of the queue
+    names = [fn for fn, _ in files]
+    times: list[float] = []
+    for step in range(12 if quick else 24):
+        for user in ("user1", "user2", "user3"):
+            for _, stats in store.get_files(user, names):
+                times.append(stats.time_s)
+        now[0] += 1.0  # next window: throttle refills, old traffic ages
+        if arm == "throttled" and store.repair.pending:
+            store.repair.drain()
+    if arm == "throttled":
+        while store.repair.pending:  # repair still finishes eventually
+            now[0] += 1.0
+            store.repair.drain()
+        for fn, blob in files:
+            out, _ = store.get_file("user0", fn)
+            assert out == blob, "throttled rebuild corrupted data"
+    return times
+
+
+def _bench_slo(engine: str, quick: bool) -> dict:
+    arms = {arm: _slo_arm(engine, quick, arm)
+            for arm in ("no_repair", "unthrottled", "throttled")}
+    row = {"name": f"disaster_slo/{engine}", "engine": engine,
+           "slo_factor": SLO_FACTOR}
+    for arm, times in arms.items():
+        row[arm] = {"p50_s": round(_pctl(times, 0.50), 4),
+                    "p99_s": round(_pctl(times, 0.99), 4),
+                    "n_gets": len(times)}
+    base = row["no_repair"]["p99_s"]
+    row["throttled_p99_over_baseline"] = round(
+        row["throttled"]["p99_s"] / max(1e-9, base), 3)
+    row["unthrottled_p99_over_baseline"] = round(
+        row["unthrottled"]["p99_s"] / max(1e-9, base), 3)
+    return row
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    for engine in ("numpy", "kernel"):
+        _bench_rebuild(engine, quick)  # untimed warmup (kernel JIT)
+        rows.append(_bench_rebuild(engine, quick))
+        rows.append(_bench_scrub(engine, quick))
+    rows.append(_bench_slo("numpy", quick))
+    with open(_OUT, "w") as f:
+        json.dump({"slo_factor": SLO_FACTOR, "link_bps": LINK_BPS,
+                   "limit_bps": LIMIT_BPS, "results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        name = r["name"]
+        if name.startswith("disaster_rebuild"):
+            if not r["identical_artifacts"]:
+                fails.append(f"{name}: artifacts diverged")
+            if r["engine"] == "kernel":
+                bound = r["n_sub_batches"] * MAX_LAUNCHES_PER_SUB_BATCH
+                if r["gf_launches"] > bound:
+                    fails.append(
+                        f"{name}: re-placement re-serialized -- "
+                        f"{r['gf_launches']} GF launches for "
+                        f"{r['n_sub_batches']} sub-batches "
+                        f"(allowance {bound})")
+                if r["gf_launches"] >= r["n_chunks_replaced"]:
+                    fails.append(f"{name}: O(chunks) launch scaling")
+        elif name.startswith("disaster_scrub"):
+            if r["launches"] != 0:
+                fails.append(
+                    f"{name}: scrub dispatched {r['launches']} launches; "
+                    "sweeps must be metadata-only")
+        elif name.startswith("disaster_slo"):
+            if r["throttled_p99_over_baseline"] > SLO_FACTOR:
+                fails.append(
+                    f"{name}: throttled repair broke the SLO -- p99 "
+                    f"{r['throttled_p99_over_baseline']}x baseline "
+                    f"(budget {SLO_FACTOR}x)")
+            if r["unthrottled_p99_over_baseline"] <= SLO_FACTOR:
+                fails.append(
+                    f"{name}: unthrottled burst stayed within "
+                    f"{SLO_FACTOR}x baseline "
+                    f"({r['unthrottled_p99_over_baseline']}x) -- the "
+                    "throttle is not load-bearing at this scale")
+    return fails
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

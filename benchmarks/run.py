@@ -25,6 +25,7 @@ MODULES = [
     "pipeline_bench",
     "scheduler_bench",
     "repair_bench",
+    "disaster_bench",
     "class_bench",
     "kernel_bench",
     "checkpoint_bench",

@@ -77,6 +77,13 @@ class UserLevelBinding(BindingScheme):
         for c in clusters:
             if c.cluster_id == cid:
                 return c
+        # the bound cluster left the pool (declared lost after a
+        # disaster): re-assign instead of stranding the user -- their
+        # surviving data was re-placed, new writes need a live home
+        cid = self._assign(user, clusters)
+        for c in clusters:
+            if c.cluster_id == cid:
+                return c
         raise KeyError(f"user {user!r} bound to cluster {cid}, "
                        f"not in this pool")
 

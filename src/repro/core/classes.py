@@ -87,6 +87,18 @@ class StorageClass:
         """Space expansion n/k of the class's code."""
         return self.n / self.k
 
+    def spawn_cluster(self, cluster_id: int, node_capacity: int):
+        """Build a fresh cluster carrying this class's pool ``(n, k)``.
+
+        The admission half of the disaster-recovery lifecycle: after
+        ``declare_lost()`` removes a cluster from a pool,
+        ``SEARSStore.admit_cluster`` uses this to bring replacement
+        capacity online with the pool's own code (a cluster stores one
+        piece per node, so its code is fixed at birth).
+        """
+        from repro.core.cluster import Cluster
+        return Cluster(cluster_id, self.n, node_capacity, k=self.k)
+
     # ------------------------------------------------------------ presets --
     @classmethod
     def realtime(cls, **overrides) -> "StorageClass":

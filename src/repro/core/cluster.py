@@ -97,12 +97,19 @@ class ChunkHealth:
 
     ``holders`` are alive nodes currently serving their piece (the decode
     survivor set); ``missing`` are alive nodes whose piece is absent (the
-    rebuild targets of a repair pass).  Dead nodes appear in neither --
-    they can neither serve reads nor accept writes.
+    rebuild targets of an in-place repair pass); ``lost`` are dead nodes
+    whose piece is *gone* (wiped before death, or the whole cluster was
+    declared lost) -- they can neither serve reads nor accept writes, so
+    only cross-cluster re-placement can restore their redundancy.  Dead
+    nodes still holding their piece appear in none of the three: a revive
+    brings the piece back intact.  A replaced (wiped) or declared-lost
+    node is therefore never a holder -- its slot is ``missing`` while the
+    node is alive-and-empty, ``lost`` once it is down-and-empty.
     """
 
     holders: tuple[int, ...]
     missing: tuple[int, ...]
+    lost: tuple[int, ...] = ()
 
     @property
     def whole(self) -> bool:
@@ -131,6 +138,7 @@ class Cluster:
         self.k = max(1, n // 2) if k is None else k
         self.code = RSCode(self.n, self.k)  # validates k <= n
         self._reserved = 0  # bytes promised to planned-but-unwritten chunks
+        self.lost = False  # whole-cluster disaster: all pieces gone forever
 
     def reserve(self, nbytes: int) -> None:
         """Earmark capacity for a planned chunk whose pieces land later.
@@ -224,8 +232,16 @@ class Cluster:
         """
         holders: dict[bytes, list[int]] = {cid: [] for cid in chunk_ids}
         missing: dict[bytes, list[int]] = {cid: [] for cid in chunk_ids}
+        lost: dict[bytes, list[int]] = {cid: [] for cid in chunk_ids}
         for node in self.nodes:
             if not node.alive:
+                # a dead node that lost its piece (wiped replacement that
+                # died again, or a declared-lost cluster) can never serve
+                # it back on revive -- surface the slot as `lost` so the
+                # repair planner can tell "down but intact" from "gone"
+                for cid in holders:
+                    if (cid, node.node_id) not in node._pieces:
+                        lost[cid].append(node.node_id)
                 continue
             for cid in holders:
                 if node.has(cid, node.node_id):
@@ -233,7 +249,8 @@ class Cluster:
                 else:
                     missing[cid].append(node.node_id)
         return {cid: ChunkHealth(holders=tuple(holders[cid]),
-                                 missing=tuple(missing[cid]))
+                                 missing=tuple(missing[cid]),
+                                 lost=tuple(lost[cid]))
                 for cid in chunk_ids}
 
     def delete_chunk(self, chunk_id: bytes) -> None:
@@ -257,8 +274,37 @@ class Cluster:
             self.nodes[i].alive = False
 
     def revive_nodes(self, ids: list[int]) -> None:
+        if self.lost:
+            raise NodeDownError(
+                f"cluster {self.cluster_id} was declared lost; its nodes "
+                "cannot come back (admit a fresh cluster instead)")
         for i in ids:
             self.nodes[i].alive = True
+
+    def declare_lost(self) -> None:
+        """Whole-cluster disaster: every node down, every piece gone.
+
+        Models losing a datacenter/availability zone: the hardware is
+        unreachable *and* unrecoverable, so all pieces are wiped (unlike
+        ``kill_nodes``, whose pieces survive a revive).  A lost cluster
+        refuses revives; recovery is cross-cluster re-placement of its
+        chunks plus :meth:`SEARSStore.admit_cluster` for fresh capacity.
+        Idempotent.
+        """
+        for node in self.nodes:
+            node.wipe()
+            node.alive = False
+        self._reserved = 0
+        self.lost = True
+
+    def viable(self, need_bytes: int = 0) -> bool:
+        """Can this cluster accept a re-placed chunk right now?
+
+        Not lost, at least ``k`` alive nodes (a rebuilt chunk must land
+        with decodable redundancy), and ``need_bytes`` of free capacity.
+        """
+        return (not self.lost and self.alive_count() >= self.k
+                and self.free >= need_bytes)
 
     def replace_nodes(self, ids: list[int]) -> None:
         """Swap failed nodes for factory-fresh replacements.

@@ -132,6 +132,16 @@ class ChunkIndex:
             return True
         return False
 
+    def copies(self, chunk_id: bytes) -> tuple[int, ...]:
+        """Cluster ids holding an indexed copy of this chunk, sorted.
+
+        Re-placement's donor discovery: under ULB the same content may be
+        stored independently on several clusters, and RS pieces are
+        content-deterministic, so any copy under the same ``(n, k)`` can
+        donate pieces toward a rebuild.
+        """
+        return tuple(sorted(self._chunks.get(chunk_id, ())))
+
     def cluster_chunks(self, cluster_id: int) -> set[bytes]:
         return {cid for cid, copies in self._chunks.items()
                 if cluster_id in copies}

@@ -30,6 +30,8 @@ standard analysis for coded storage latency (the paper's own refs [9],[10]):
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Callable
 
 import numpy as np
 
@@ -51,6 +53,97 @@ class LatencyParams:
         x = float(rng.lognormal(0.0, self.sigma))
         rate = min(self.conn_bw * x * max(1e-6, 1.0 - rho), self.client_bw)
         return self.rtt + nbytes / rate
+
+
+class RepairBandwidth:
+    """Token-bucket repair budget + per-cluster repair-traffic load model.
+
+    Two coupled roles, shared between the scheduler's foreground windows
+    and the repair/scrub lanes:
+
+    * **Throttle** -- ``try_take(nbytes)`` draws repair bytes from a
+      token bucket refilled at ``limit_bps`` (burst-capped).  The repair
+      drain asks before rebuilding each chunk and defers what the budget
+      refuses, so a rebuild storm trickles out at the configured rate
+      instead of monopolizing the links.  ``limit_bps=None`` grants
+      everything (track-only mode -- the "unthrottled" comparison point).
+    * **Load model** -- ``note(cluster_id, nbytes)`` records where repair
+      traffic actually went; ``rho(cluster_id)`` converts the recent
+      windowed byte rate into the utilisation ``retrieval_time`` charges
+      foreground connections on that cluster (``SEARSStore._assemble``
+      floors each share's rho with it).  Tracking is always on once the
+      object is installed, so an unthrottled drain still congests
+      foreground gets -- that asymmetry is exactly what the disaster
+      bench measures.
+
+    ``clock`` is injectable (like the scheduler's auto-flush clock) so
+    tests and benchmarks drive time deterministically.
+    """
+
+    def __init__(self, link_bps: float = 50e6,
+                 limit_bps: float | None = None,
+                 burst_bytes: float | None = None,
+                 window_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if link_bps <= 0:
+            raise ValueError(f"link_bps must be > 0, got {link_bps}")
+        if limit_bps is not None and limit_bps <= 0:
+            raise ValueError(f"limit_bps must be > 0, got {limit_bps}")
+        self.link_bps = float(link_bps)
+        self.limit_bps = None if limit_bps is None else float(limit_bps)
+        self.burst_bytes = float(
+            burst_bytes if burst_bytes is not None
+            else (self.limit_bps or self.link_bps) * window_s)
+        self.window_s = float(window_s)
+        self._clock = clock
+        self._tokens = self.burst_bytes
+        self._refilled = clock()
+        self._win_start = self._refilled
+        self._cur: dict[int, float] = {}  # bytes this window, per cluster
+        self._prev: dict[int, float] = {}  # previous full window
+        self.taken = 0  # bytes granted to repair
+        self.deferred = 0  # grant refusals (repair items pushed back)
+
+    # ------------------------------------------------------ token bucket --
+    def try_take(self, nbytes: int) -> bool:
+        """Draw ``nbytes`` of repair budget; False defers the work."""
+        if self.limit_bps is None:
+            self.taken += nbytes
+            return True
+        now = self._clock()
+        self._tokens = min(self.burst_bytes,
+                           self._tokens
+                           + (now - self._refilled) * self.limit_bps)
+        self._refilled = now
+        if self._tokens >= nbytes:
+            self._tokens -= nbytes
+            self.taken += nbytes
+            return True
+        self.deferred += 1
+        return False
+
+    # -------------------------------------------------------- load model --
+    def _advance(self) -> None:
+        now = self._clock()
+        elapsed = now - self._win_start
+        if elapsed >= self.window_s:
+            # the finished window becomes history unless it is stale
+            self._prev = self._cur if elapsed < 2 * self.window_s else {}
+            self._cur = {}
+            self._win_start = now
+
+    def note(self, cluster_id: int, nbytes: int) -> None:
+        """Record repair bytes moved to/from a cluster (always tracked)."""
+        self._advance()
+        self._cur[cluster_id] = self._cur.get(cluster_id, 0.0) + nbytes
+
+    def rho(self, cluster_id: int) -> float:
+        """Recent repair-traffic utilisation of one cluster, in [0, 0.95]."""
+        self._advance()
+        nbytes = (self._prev.get(cluster_id, 0.0)
+                  + self._cur.get(cluster_id, 0.0))
+        span = self.window_s + (self._clock() - self._win_start)
+        return min(0.95, (nbytes / span) / self.link_bps)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,9 @@ Three checks, mirroring the searslint static passes at runtime:
    launch *budget* (gear: one per distinct chunker per put window;
    sha1: ``ceil(chunks / hash_batch)``; gf/fused: one per ``(code,
    TILE_L-quantized piece length)`` bucket; repair: decode + encode per
-   rebuilt chunk) and :meth:`check_launches` asserts the launches
+   recoded chunk whether it rebuilds in place or re-places onto another
+   cluster; scrub sweeps and metadata-only merges: zero) and
+   :meth:`check_launches` asserts the launches
    attributed to this store never exceed it.  Budgets and attributed
    counts are cumulative over the store's lifetime, so pipelined window
    interleaving (begin i+1 before finish i) needs no special casing.  The model is an
@@ -26,7 +28,10 @@ Three checks, mirroring the searslint static passes at runtime:
    drain: each ``(chunk, cluster)`` index record's refcount equals the
    number of live files referencing it (once per file), and every piece
    held by any node belongs to a live index record under that piece's
-   slot.
+   slot.  Cross-cluster re-placement must therefore move record,
+   refcounts, file entries and pieces as one step — a half-moved chunk
+   (stale entries, leftover home pieces) trips this check at the next
+   window boundary.
 
 ``LAUNCHES`` is process-global, so the sanitizer *attributes* launches
 to its own store by bracketing every store code path that dispatches
@@ -181,6 +186,21 @@ class Sanitizer:
         else:
             self.add_budget(sha1=-(-n // hash_batch) if n else 0,
                             gf=len(buckets))
+
+    def add_repair_budget(self, n_jobs: int) -> None:
+        """Budget one repair/re-placement sub-batch's recode launches.
+
+        ``n_jobs`` chunks ride one ``recode_blobs_multi`` call: decode +
+        re-encode is two GF launches per chunk as the ceiling, and
+        (code, length)-bucketing merges far below it.  The same budget
+        covers in-place rebuilds and cross-cluster re-placements -- a
+        re-placement recode targets a *different* cluster but is still
+        exactly one decode + one encode of one chunk, so "repair = 2x
+        jobs" holds per job, not per (cluster, chunk) pair.  Merges and
+        scrub sweeps are metadata-only: zero budget, and the model
+        catches any engine traffic they would dispatch.
+        """
+        self.add_budget(gf=2 * n_jobs)
 
     def check_launches(self, label: str) -> None:
         seen = self._observed()

@@ -249,8 +249,15 @@ class SchedulerStats:
     n_repair_windows: int = 0  # flushes that ran a repair drain
     repair_chunks: int = 0  # chunk copies classified by the lane
     repair_pieces_rebuilt: int = 0
+    repair_pieces_replaced: int = 0  # pieces landed on re-placement targets
+    repair_deferred: int = 0  # drain items pushed back by the bandwidth budget
     repair_gf_launches: int = 0  # GF launches spent on repair recodes
     repair_seconds: float = 0.0
+    # proactive scrub lane (timer-driven sampled censuses feeding the
+    # repair queue; pure metadata, zero data-plane launches)
+    n_scrub_sweeps: int = 0
+    scrub_chunks_censused: int = 0
+    scrub_enqueued: int = 0  # chunk copies the sweeps newly queued
 
     @property
     def data_plane_launches(self) -> int:
@@ -291,6 +298,15 @@ class BatchScheduler:
     to the chunks closest to data loss.  Repair launch counts and timings
     land in separate ``SchedulerStats`` fields so foreground coalescing
     metrics stay honest.
+
+    **Scrub lane**: with ``scrub_interval`` set, the scheduler runs a
+    proactive ``store.repair.scrub()`` sweep whenever the (injectable)
+    clock says at least that many seconds have passed since the last one
+    -- checked at each flush and each ``poll()``, so an external ticker
+    keeps scrubbing an otherwise idle store.  ``scrub_budget`` passes
+    through to :meth:`RepairManager.scrub` (per-class census budgets).
+    The sweep runs *before* the flush's repair drain, so damage it finds
+    can heal in the same flush's bounded repair window.
     """
 
     def __init__(self, store, queue: RequestQueue | None = None,
@@ -298,6 +314,8 @@ class BatchScheduler:
                  flush_interval: float | None = None,
                  clock: Callable[[], float] = time.monotonic,
                  repair_chunks_per_flush: int | None = None,
+                 scrub_interval: float | None = None,
+                 scrub_budget=None,
                  pipeline: bool = True) -> None:
         self.store = store
         self.queue = queue or RequestQueue()
@@ -308,6 +326,9 @@ class BatchScheduler:
         self._pending_bytes = 0
         self._window_opened: float | None = None
         self.repair_chunks_per_flush = repair_chunks_per_flush
+        self.scrub_interval = scrub_interval
+        self.scrub_budget = scrub_budget  # int | {class: int} | None
+        self._last_scrub = clock()
         # double-buffer put windows within a flush: issue window i+1's
         # device chunking pass before window i's host phases run.  The
         # begin phase touches no store state, so results stay
@@ -371,11 +392,19 @@ class BatchScheduler:
                 >= self.flush_interval)
 
     def poll(self) -> list[Request]:
-        """Flush if a time-triggered window has expired (external ticker)."""
+        """Flush if a time-triggered window has expired (external ticker).
+
+        Also advances the timer-driven background lanes: a due scrub
+        sweep runs (and its findings drain through the bounded repair
+        window) even when no foreground window expires -- an idle store
+        still heals.
+        """
         if len(self.queue) and self.flush_interval is not None \
                 and self._should_auto_flush():
             self.stats.n_auto_flushes += 1
             return self.flush()
+        if self._scrub_window():
+            self._repair_window()
         return []
 
     @property
@@ -401,7 +430,8 @@ class BatchScheduler:
         self._pending_bytes = 0
         self._window_opened = None
         if not requests:
-            self._repair_window()  # idle flush still advances repair
+            self._scrub_window()  # idle flush still advances the
+            self._repair_window()  # background scrub + repair lanes
             return []
         before = LAUNCHES.snapshot()
         t0 = time.perf_counter()
@@ -449,8 +479,28 @@ class BatchScheduler:
         self.stats.gear_launches += delta.gear
         self.stats.fused_launches += delta.fused
         self.stats.flush_seconds += time.perf_counter() - t0
+        self._scrub_window()
         self._repair_window()
         return requests
+
+    def _scrub_window(self) -> bool:
+        """Timer lane: run a proactive scrub sweep when one is due.
+
+        Returns True when a sweep ran.  Pure metadata -- any damage found
+        is queued for the repair lane that follows.
+        """
+        manager = getattr(self.store, "repair", None)
+        if self.scrub_interval is None or manager is None:
+            return False
+        now = self._clock()
+        if now - self._last_scrub < self.scrub_interval:
+            return False
+        self._last_scrub = now
+        report = manager.scrub(self.scrub_budget)
+        self.stats.n_scrub_sweeps += 1
+        self.stats.scrub_chunks_censused += report.n_censused
+        self.stats.scrub_enqueued += report.n_enqueued
+        return True
 
     def _repair_window(self) -> None:
         """Background lane: drain a bounded slice of the repair queue.
@@ -472,6 +522,8 @@ class BatchScheduler:
         self.stats.n_repair_windows += 1
         self.stats.repair_chunks += report.n_chunks
         self.stats.repair_pieces_rebuilt += report.pieces_rebuilt
+        self.stats.repair_pieces_replaced += report.pieces_replaced
+        self.stats.repair_deferred += report.deferred
         self.stats.repair_gf_launches += LAUNCHES.delta(before).gf
         self.stats.repair_seconds += time.perf_counter() - t0
 

@@ -164,7 +164,8 @@ class SEARSStore:
                  hash_fn=hashing.chunk_id,
                  engine: str | CodingEngine = "numpy",
                  classes: list[StorageClass] | None = None,
-                 sanitize: bool | None = None) -> None:
+                 sanitize: bool | None = None,
+                 repair_bandwidth=None) -> None:
         legacy = [kw for kw, v in (("n", n), ("k", k),
                                    ("binding", binding),
                                    ("chunker", chunker))
@@ -198,6 +199,11 @@ class SEARSStore:
         self.clusters = [Cluster(i, pool_nk[owner[i]][0], node_capacity,
                                  k=pool_nk[owner[i]][1])
                          for i in range(num_clusters)]
+        # pool membership survives declare_cluster_lost (which removes the
+        # cluster from self.pools) so stats/repair can still resolve the
+        # owning pool of a lost cluster's chunks
+        self._cluster_pool: dict[int, str] = dict(owner)
+        self._node_capacity = node_capacity
         # per-class binding scheme instances (ULB assignment state is
         # class-local: the same user may bind differently per class)
         self._bindings = {c.name: make_binding(c.binding)
@@ -208,7 +214,8 @@ class SEARSStore:
         self.rng = np.random.default_rng(seed)
         self.hash_fn = hash_fn
         self.engine = make_engine(engine, hash_fn)
-        self.repair = RepairManager(self, sub_batch=self.REPAIR_BATCH)
+        self.repair = RepairManager(self, sub_batch=self.REPAIR_BATCH,
+                                    bandwidth=repair_bandwidth)
         self._logical = {c.name: 0 for c in class_list}
         self._nfiles = {c.name: 0 for c in class_list}
         # runtime sanitizer (begin purity, expected-launch model, piece
@@ -1033,7 +1040,13 @@ class SEARSStore:
             out += blob[:ln]
 
         cls = self.classes.get(meta.storage_class, self.default_class)
-        shares = [ClusterShare(cl, nb, rho=(rho_fn(cl) if rho_fn else 0.0))
+        # repair/scrub traffic congests the clusters it reads/writes: with
+        # a RepairBandwidth installed, its per-cluster utilisation floors
+        # the rho each retrieval connection sees (max with any caller-
+        # provided rho_fn).  Without one, behavior is unchanged (rho 0).
+        shares = [ClusterShare(cl, nb,
+                               rho=max(rho_fn(cl) if rho_fn else 0.0,
+                                       self.repair.cluster_rho(cl)))
                   for cl, nb in plan.share_bytes.items()]
         t = retrieval_time(shares, cls.n, cls.k, self.latency, self.rng)
         stats = RetrievalStats(filename=plan.filename, file_bytes=meta.size,
@@ -1105,6 +1118,61 @@ class SEARSStore:
             seen.add((cid, cluster_id))
             if self.index.release(cid, cluster_id):
                 self.clusters[cluster_id].delete_chunk(cid)
+
+    # ------------------------------------------------- disaster recovery --
+    def pool_of(self, cluster_id: int) -> str:
+        """Pool tag a cluster belongs (or belonged, if lost) to."""
+        return self._cluster_pool[cluster_id]
+
+    def declare_cluster_lost(self, cluster_id: int) -> int:
+        """Whole-cluster disaster: wipe the cluster, queue re-placement.
+
+        The cluster's nodes go down with their pieces gone forever
+        (:meth:`Cluster.declare_lost`), the cluster leaves its pool so
+        binding/placement never targets it again, any ULB users bound to
+        it are unbound (their next write re-assigns inside the surviving
+        pool), and every chunk copy the index records on the cluster is
+        queued for *cross-cluster re-placement* -- the next
+        ``repair.repair()`` / scheduler repair lane rebuilds each one from
+        surviving replica clusters onto a healthy cluster of the same
+        pool.  Returns the number of chunk copies queued.  Idempotent.
+        """
+        cluster = self.clusters[cluster_id]
+        tag = self._cluster_pool[cluster_id]
+        remaining = tuple(i for i in self.pools[tag] if i != cluster_id)
+        if not remaining and not cluster.lost:
+            raise RuntimeError(
+                f"cluster {cluster_id} is pool {tag!r}'s last cluster; "
+                "admit_cluster() replacement capacity before declaring "
+                "the loss")
+        cluster.declare_lost()
+        self.pools[tag] = remaining
+        for binding in self._bindings.values():
+            bound = getattr(binding, "_bound", None)
+            if bound:
+                for user in sorted(u for u, c in bound.items()
+                                   if c == cluster_id):
+                    del bound[user]
+        return self.repair.note_cluster_lost(cluster_id)
+
+    def admit_cluster(self, storage_class: str | None = None,
+                      node_capacity: int | None = None) -> Cluster:
+        """Bring a fresh cluster online in a class's pool.
+
+        The new cluster gets the next free cluster id and the pool's own
+        ``(n, k)`` (via :meth:`StorageClass.spawn_cluster`); binding and
+        placement see it immediately.  The admission half of the
+        ``declare_cluster_lost`` lifecycle -- replacement capacity after
+        a disaster, or elastic growth for a hot pool.
+        """
+        cls = self._class(storage_class)
+        cluster = cls.spawn_cluster(
+            len(self.clusters),
+            self._node_capacity if node_capacity is None else node_capacity)
+        self.clusters.append(cluster)
+        self.pools[cls.pool_tag] += (cluster.cluster_id,)
+        self._cluster_pool[cluster.cluster_id] = cls.pool_tag
+        return cluster
 
     # ------------------------------------------------------------------
     REPAIR_BATCH = 256  # chunks decoded+re-encoded per repair sub-batch

@@ -346,6 +346,24 @@ class StormConfig:
     ``allow_data_loss=True`` the caps come off and storms may push chunks
     past the code's tolerance -- the harness for exercising the
     ``RepairReport.unrecoverable`` path.
+
+    **Disaster extensions** (all off by default, so existing traces are
+    bit-identical):
+
+    * ``cluster_losses`` schedules that many whole-cluster disasters,
+      spread over the trace: the victim cluster is declared lost (all
+      pieces gone) and -- when ``admit_after_loss`` -- a fresh cluster is
+      admitted to its pool first, so placement capacity survives.  Lost
+      clusters drop out of every later wave.  Note the per-cluster safe
+      cap cannot protect a lost cluster's chunks; in safe mode the
+      *workload* must provide >= k cross-cluster surviving pieces (e.g.
+      duplicate ULB copies) for the trace to stay recoverable -- that is
+      exactly the property the disaster differentials prove.
+    * ``racks``/``rack_storm_prob`` add correlated shared-rack waves:
+      with probability ``rack_storm_prob`` per step one cluster loses
+      (up to the safe cap) every node of one rack at once (nodes are
+      striped ``node_id % racks``), emitted as an ordinary correlated
+      ``kill`` event.
     """
 
     n_clusters: int = 4
@@ -359,6 +377,10 @@ class StormConfig:
     repair_every_step: bool = True
     allow_data_loss: bool = False
     seed: int = 0
+    cluster_losses: int = 0  # whole-cluster disasters over the trace
+    admit_after_loss: bool = True  # admit fresh capacity before each loss
+    racks: int = 0  # shared racks per cluster (0: no rack correlation)
+    rack_storm_prob: float = 0.0  # per-step chance of a rack wave
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,14 +389,18 @@ class StormEvent:
 
     ``kind`` is ``kill`` (nodes go down, pieces intact), ``revive``
     (nodes return with pieces intact), ``replace`` (nodes return
-    factory-fresh and empty), or ``repair`` (run a full prioritized
-    repair pass).  Kill events sharing a ``step`` are one storm wave.
+    factory-fresh and empty), ``repair`` (run a full prioritized repair
+    pass), ``cluster_loss`` (whole-cluster disaster:
+    ``store.declare_cluster_lost``), or ``admit`` (bring a fresh cluster
+    online in pool/class ``pool`` -- empty means the default class).
+    Kill events sharing a ``step`` are one storm wave.
     """
 
     step: int
-    kind: str  # kill | revive | replace | repair
+    kind: str  # kill | revive | replace | repair | cluster_loss | admit
     cluster_id: int = -1
     node_ids: tuple[int, ...] = ()
+    pool: str = ""  # admit events: storage-class name ("" -> default)
 
 
 def failure_storm_trace(cfg: StormConfig) -> list[StormEvent]:
@@ -397,11 +423,32 @@ def failure_storm_trace(cfg: StormConfig) -> list[StormEvent]:
     # rebuilt it -- reviving it brings back an empty node, not pieces
     dead_wiped: dict[int, set[int]] = {c: set()
                                        for c in range(cfg.n_clusters)}
+    lost: set[int] = set()  # whole clusters declared lost (out of play)
+    loss_steps: dict[int, int] = {}
+    for j in range(cfg.cluster_losses):
+        s = (j * cfg.n_steps) // max(1, cfg.cluster_losses)
+        loss_steps[s] = loss_steps.get(s, 0) + 1
     events: list[StormEvent] = []
     for step in range(cfg.n_steps):
+        # -- whole-cluster disasters --------------------------------------
+        for _ in range(loss_steps.get(step, 0)):
+            candidates = sorted(set(range(cfg.n_clusters)) - lost)
+            if len(candidates) <= 1:
+                break  # never lose the last original cluster
+            victim = int(rng.choice(candidates))
+            if cfg.admit_after_loss:
+                # replacement capacity comes online *before* the loss so
+                # the pool never empties and re-placement has a target
+                events.append(StormEvent(step, "admit"))
+            events.append(StormEvent(step, "cluster_loss", victim))
+            lost.add(victim)
+            dead[victim].clear()
+            wiped[victim].clear()
+            dead_wiped[victim].clear()
+        alive_clusters = sorted(set(range(cfg.n_clusters)) - lost)
         # -- storm wave: simultaneous kills across several clusters ------
-        hit = rng.choice(cfg.n_clusters,
-                         size=min(cfg.storm_clusters, cfg.n_clusters),
+        hit = rng.choice(alive_clusters,
+                         size=min(cfg.storm_clusters, len(alive_clusters)),
                          replace=False)
         for c in sorted(int(c) for c in hit):
             down = dead[c] | dead_wiped[c]
@@ -443,6 +490,24 @@ def failure_storm_trace(cfg: StormConfig) -> list[StormEvent]:
                 wiped[c] |= set(replaced)
                 events.append(StormEvent(step, "replace", c,
                                          tuple(sorted(replaced))))
+        # -- correlated rack wave: one rack of one cluster at once --------
+        if cfg.racks > 0 and cfg.rack_storm_prob > 0 and alive_clusters \
+                and rng.random() < cfg.rack_storm_prob:
+            c = int(rng.choice(alive_clusters))
+            rack = int(rng.integers(cfg.racks))
+            down = dead[c] | dead_wiped[c]
+            alive = sorted(set(range(cfg.n)) - down)
+            ids = [i for i in alive if i % cfg.racks == rack]
+            if not cfg.allow_data_loss:
+                cap = (cfg.n - cfg.k) - len(down | wiped[c])
+                ids = ids[:max(0, cap)]
+            if ids:
+                ids_set = set(ids)
+                dead[c] |= ids_set - wiped[c]
+                dead_wiped[c] |= ids_set & wiped[c]
+                wiped[c] -= ids_set
+                events.append(StormEvent(step, "kill", c,
+                                         tuple(sorted(ids_set))))
         # -- repair pass: rebuilds pieces on alive nodes ------------------
         if cfg.repair_every_step:
             events.append(StormEvent(step, "repair"))
@@ -454,10 +519,13 @@ def failure_storm_trace(cfg: StormConfig) -> list[StormEvent]:
 def apply_storm(store, events: list[StormEvent]) -> list:
     """Replay a failure-storm trace against a live store.
 
-    ``kill``/``revive``/``replace`` mutate the cluster nodes; each
-    ``repair`` event runs a full prioritized ``store.repair.repair()``
-    pass.  Returns the ``RepairReport`` of every repair event in trace
-    order.
+    ``kill``/``revive``/``replace`` mutate the cluster nodes;
+    ``cluster_loss``/``admit`` run the store's disaster lifecycle
+    (``declare_cluster_lost`` queues the victim's chunks for
+    cross-cluster re-placement; ``admit`` brings a fresh cluster online
+    in the event's class, default class when empty); each ``repair``
+    event runs a full prioritized ``store.repair.repair()`` pass.
+    Returns the ``RepairReport`` of every repair event in trace order.
     """
     reports = []
     for ev in events:
@@ -467,6 +535,10 @@ def apply_storm(store, events: list[StormEvent]) -> list:
             store.clusters[ev.cluster_id].revive_nodes(list(ev.node_ids))
         elif ev.kind == "replace":
             store.clusters[ev.cluster_id].replace_nodes(list(ev.node_ids))
+        elif ev.kind == "cluster_loss":
+            store.declare_cluster_lost(ev.cluster_id)
+        elif ev.kind == "admit":
+            store.admit_cluster(storage_class=ev.pool or None)
         elif ev.kind == "repair":
             reports.append(store.repair.repair())
         else:

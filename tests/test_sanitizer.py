@@ -157,6 +157,50 @@ def test_refcount_forgery_breaks_ledger():
         forge_and_flush()
 
 
+def _lose_home_with_donor(s):
+    """Duplicate one user's files onto a second ULB user, then declare
+    the first user's home cluster lost -- queues re-placement work with
+    a healthy donor copy available."""
+    files = _files(n_files=3)
+    s.put_files("u", files)
+    s.put_files("v", files)  # ULB: same bytes, different home cluster
+    lost_id = s.binding._bound["u"]
+    s.declare_cluster_lost(lost_id)
+    return lost_id
+
+
+def test_per_piece_dispatch_during_replacement_breaks_launch_model():
+    """Cross-cluster re-placement shares the in-place recode budget
+    (2 GF launches per job): an engine encoding each target piece with
+    its own dispatch must trip the expected-launch model in the drain."""
+    from repro.kernels.launches import LAUNCHES
+
+    s = _store()
+    _lose_home_with_donor(s)
+    real = s.engine.recode_blobs_multi
+
+    def leaky_recode(jobs):
+        LAUNCHES.gf += s.n * len(jobs)  # one fake dispatch per piece
+        return real(jobs)
+
+    s.engine.recode_blobs_multi = leaky_recode
+    with pytest.raises(SanitizerError, match="launch model"):
+        s.repair.repair()
+
+
+def test_refcount_forgery_after_replacement_breaks_ledger():
+    """A half-committed move (target copy's refcount forged after the
+    drain) must be caught by the ledger check at the next window."""
+    s = _store()
+    _lose_home_with_donor(s)
+    report = s.repair.repair()
+    assert report.replaced and report.balanced
+    cid, _, new_id = report.replaced[0]
+    s.index.get(cid, new_id).refcount += 1  # forge the moved copy
+    with pytest.raises(SanitizerError, match="ledger"):
+        s.put_file("u", "trigger", _data(8_000, seed=42))
+
+
 def test_foreign_launch_traffic_is_ignored_and_resync_rebaselines():
     from repro.kernels.launches import LAUNCHES
 
