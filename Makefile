@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-fast test-launches lint bench bench-pipeline \
-	bench-smoke bench-repair bench-disaster bench-classes headline
+.PHONY: test test-slow test-fast test-launches test-shards lint bench \
+	bench-pipeline bench-smoke bench-repair bench-disaster bench-classes \
+	bench-shards headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -23,6 +24,16 @@ test-launches:
 	$(PYTHON) -m pytest -x -q tests/test_ingest.py tests/test_repair.py \
 		tests/test_classes.py tests/test_disaster.py
 
+# sharded-control-plane lane: ShardMap mechanics + the N-shard-vs-
+# 1-shard differential proof harness (all engines, mid-trace add/drain),
+# then the core store/scheduler suites re-run sanitized with 3 control
+# shards so the per-shard launch model and shard-ledger conservation
+# checks run live on every window
+test-shards:
+	$(PYTHON) -m pytest -x -q tests/test_shards.py
+	SEARS_SANITIZE=1 SEARS_SHARDS=3 $(PYTHON) -m pytest -x -q \
+		tests/test_store.py tests/test_scheduler.py
+
 # searslint: begin-purity, dispatch hygiene, counter coverage, plan
 # determinism (exits 1 on any unwaivered finding)
 lint:
@@ -36,7 +47,7 @@ test-fast:
 		tests/test_disaster.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py \
-		tests/test_lint.py tests/test_sanitizer.py
+		tests/test_lint.py tests/test_sanitizer.py tests/test_shards.py
 
 # full paper-claim benchmark battery (results/bench.json)
 bench:
@@ -46,12 +57,12 @@ bench:
 bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
 
-# quick CI smoke: data-plane pipeline + cross-user scheduler + storm
-# repair + disaster recovery + storage-class benchmarks
-# (BENCH_pipeline.json + BENCH_scheduler.json + BENCH_repair.json +
-# BENCH_disaster.json + BENCH_classes.json)
+# quick CI smoke: data-plane pipeline + cross-user scheduler + control
+# sharding + storm repair + disaster recovery + storage-class benchmarks
+# (BENCH_pipeline.json + BENCH_scheduler.json + BENCH_shard.json +
+# BENCH_repair.json + BENCH_disaster.json + BENCH_classes.json)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,repair_bench,disaster_bench,class_bench
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,shard_bench,repair_bench,disaster_bench,class_bench
 
 # failure-storm repair: per-chunk vs batched cross-cluster rebuild on
 # both engines (BENCH_repair.json)
@@ -67,6 +78,12 @@ bench-disaster:
 # mixed-window launch economics on both engines (BENCH_classes.json)
 bench-classes:
 	$(PYTHON) -m benchmarks.run --only class_bench
+
+# control-plane sharding: 1/2/4-shard flush windows must produce
+# byte-identical artifacts at O(buckets)-per-sub-window launch cost
+# (BENCH_shard.json)
+bench-shards:
+	$(PYTHON) -m benchmarks.run --only shard_bench
 
 # headline 3 MB retrieval claim; ENGINE=numpy|kernel
 ENGINE ?= numpy

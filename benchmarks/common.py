@@ -27,7 +27,7 @@ def calibrated_params() -> LatencyParams:
 
 def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
                node_capacity: int = 2 << 30, seed: int = 0,
-               engine: str = "numpy"):
+               engine: str = "numpy", shards: int = 1):
     lat = calibrated_params()
     if scheme == "radmad":
         # paper: 8 MB containers at full scale; scaled with the dataset
@@ -40,7 +40,7 @@ def make_store(scheme: str, n: int = 10, k: int = 5, clusters: int = 20,
     # LAUNCHES counters, outside the sanitizer's single-store launch model
     return SEARSStore(classes=[cls], num_clusters=clusters,
                       node_capacity=node_capacity, sanitize=False,
-                      latency=lat, seed=seed, engine=engine)
+                      latency=lat, seed=seed, engine=engine, shards=shards)
 
 
 def warm_start(engine: str, clusters: int = 4) -> None:

@@ -24,6 +24,7 @@ MODULES = [
     "headline_3mb",
     "pipeline_bench",
     "scheduler_bench",
+    "shard_bench",
     "repair_bench",
     "disaster_bench",
     "class_bench",

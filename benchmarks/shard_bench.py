@@ -1,0 +1,143 @@
+"""Sharded control plane: launch economics and byte-identity benchmark.
+
+Replays one multi-user scheduler trace (puts then gets) against
+otherwise-identical kernel-engine stores with 1, 2 and 4 control
+shards.  For each shard count we record flush wall times, the
+data-plane launch deltas from ``kernels.ops.LAUNCHES``, the per-shard
+sub-window count, and a digest over every stored piece and every chunk
+record.  ``check()`` gates the two contracts:
+
+* **identity** -- the artifact digest is the same for every shard
+  count (sharding is pure state partitioning);
+* **economics** -- a sharded flush window costs one SHA-1 batch per
+  shard sub-window and O(code buckets x length buckets) GF launches per
+  sub-window, never O(chunks).
+
+Results land in ``BENCH_shard.json``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+
+from benchmarks.common import make_store, warm_start
+from repro.core.workload import (MultiUserConfig, multi_user_get_trace,
+                                 multi_user_put_trace)
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_shard.json")
+
+SHARD_SWEEP = (1, 2, 4)
+
+
+def _launches():
+    from repro.kernels import ops
+    return ops.LAUNCHES
+
+
+def _digest(store) -> str:
+    """Topology-independent digest: every piece byte, every index record."""
+    h = hashlib.sha1()
+    for cl in store.clusters:
+        for node in cl.nodes:
+            for cid, pidx in sorted(node._pieces):
+                h.update(cid)
+                h.update(pidx.to_bytes(4, "big"))
+                h.update(hashlib.sha1(node._pieces[(cid, pidx)]).digest())
+    for cid, c, info in sorted(store.index.records(),
+                               key=lambda r: (r[0], r[1])):
+        h.update(cid)
+        h.update(c.to_bytes(4, "big"))
+        h.update(info.refcount.to_bytes(8, "big"))
+    return h.hexdigest()
+
+
+def _run_one(shards: int, puts, gets) -> dict:
+    store = make_store("ulb", clusters=8, node_capacity=1 << 30,
+                       engine="kernel", shards=shards)
+    sched = store.scheduler()
+    for user, files in puts:
+        sched.submit_put(user, files)
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    put_reqs = sched.flush()
+    put_s = time.perf_counter() - t0
+    put_launches = _launches().delta(before)
+    assert all(r.ok for r in put_reqs), [r.error for r in put_reqs]
+
+    futs = [sched.submit_get(user, names) for user, names in gets]
+    before = _launches().snapshot()
+    t0 = time.perf_counter()
+    sched.flush()
+    get_s = time.perf_counter() - t0
+    get_launches = _launches().delta(before)
+    blobs = [out for f in futs for out, _ in f.result()]
+
+    n_chunks = store.stats().n_unique_chunks
+    return {
+        "name": f"shard/s{shards}",
+        "shards": shards,
+        "put_s": round(put_s, 4),
+        "get_s": round(get_s, 4),
+        "n_chunks": n_chunks,
+        "n_shard_subwindows": sched.stats.n_shard_subwindows,
+        "put_launches": {"gear": put_launches.gear,
+                         "sha1": put_launches.sha1,
+                         "gf": put_launches.gf,
+                         "total": put_launches.total},
+        "get_launches": {"gf": get_launches.gf,
+                         "total": get_launches.total},
+        "dedup_ratio": round(store.stats().dedup_ratio, 4),
+        "read_mb": round(sum(len(b) for b in blobs) / 2**20, 2),
+        "digest": _digest(store),
+    }
+
+
+def run(quick: bool = True) -> list[dict]:
+    cfg = MultiUserConfig(n_users=8 if quick else 16,
+                          files_per_user=4 if quick else 6,
+                          file_kb=48 if quick else 128)
+    puts = multi_user_put_trace(cfg)
+    gets = multi_user_get_trace(puts)
+    warm_start("kernel")
+    rows = []
+    for shards in SHARD_SWEEP:
+        _run_one(shards, puts, gets)  # untimed warmup for this demux shape
+        rows.append(_run_one(shards, puts, gets))
+    with open(_OUT, "w") as f:
+        json.dump({"engine": "kernel", "results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    digests = {r["digest"] for r in rows}
+    if len(digests) != 1:
+        fails.append(f"artifacts diverge across shard counts: {digests}")
+    for r in rows:
+        # one SHA-1 hash batch per shard sub-window of the put flush,
+        # never one per chunk
+        if r["put_launches"]["sha1"] > r["n_shard_subwindows"]:
+            fails.append(
+                f"{r['name']}: {r['put_launches']['sha1']} sha1 launches "
+                f"for {r['n_shard_subwindows']} shard sub-windows")
+        if r["put_launches"]["sha1"] >= r["n_chunks"]:
+            fails.append(f"{r['name']}: sha1 launches scale with chunks")
+        # GF/encode launches stay O(code x length buckets) per sub-window
+        if r["put_launches"]["gf"] + r["get_launches"]["gf"] >= \
+                r["n_chunks"]:
+            fails.append(
+                f"{r['name']}: GF launches "
+                f"({r['put_launches']['gf']}+{r['get_launches']['gf']}) "
+                f"scale with chunk count ({r['n_chunks']})")
+    return fails
+
+
+if __name__ == "__main__":
+    failures = check(run())
+    for f in failures:
+        print("FAIL:", f)
+    raise SystemExit(1 if failures else 0)

@@ -57,8 +57,14 @@ class UserLevelBinding(BindingScheme):
 
     name = "ulb"
 
-    def __init__(self) -> None:
-        self._bound: dict[str, int] = {}
+    def __init__(self, storage=None) -> None:
+        # `storage` is the per-user binding table; a sharded store passes
+        # a routed MutableMapping (repro.core.shard.ShardedBindingSlice)
+        # so each user's entry lives on their owning control shard.  The
+        # round-robin assignment cursor stays head-owned: sharding the
+        # cursor would make first-write placement a function of the
+        # shard count and break the N-shard-vs-1-shard byte identity.
+        self._bound = {} if storage is None else storage
         self._next = 0
 
     def _assign(self, user: str, clusters: list[Cluster]) -> int:
@@ -103,10 +109,15 @@ class UserLevelBinding(BindingScheme):
         return (cluster.cluster_id,)
 
 
-def make_binding(name: str) -> BindingScheme:
+def make_binding(name: str, storage=None) -> BindingScheme:
+    """Build a binding scheme; ``storage`` is an optional per-user table.
+
+    CLB is stateless and ignores ``storage``; ULB adopts it as its
+    ``_bound`` map (the sharded store passes a shard-routed mapping).
+    """
     name = name.lower()
     if name == "clb":
         return ChunkLevelBinding()
     if name == "ulb":
-        return UserLevelBinding()
+        return UserLevelBinding(storage=storage)
     raise ValueError(f"unknown binding scheme {name!r}")

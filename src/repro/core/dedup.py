@@ -146,6 +146,18 @@ class ChunkIndex:
         return {cid for cid, copies in self._chunks.items()
                 if cluster_id in copies}
 
+    def records(self):
+        """Iterate all (chunk_id, cluster_id, info) records, insertion order.
+
+        The sanctioned whole-index walk: callers (sanitizer ledger,
+        differential artifact dumps) get one stable iteration surface
+        that the sharded facade reimplements as a per-shard union, so
+        they never reach into ``_chunks`` directly.
+        """
+        for cid, copies in self._chunks.items():
+            for cl, info in copies.items():
+                yield cid, cl, info
+
     @property
     def index_bytes(self) -> int:
         return CHUNK_RECORD_BYTES * len(self)

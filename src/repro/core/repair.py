@@ -28,6 +28,16 @@ chunks must not cost any data-plane work at all.
   aborting the pass -- a storm survivor always gets a full accounting of
   what was rebuilt, what was already whole, and what is (still) lost.
 
+On a sharded store (``SEARSStore(shards=N)``) repair is *head-
+coordinated, shard-routed*: the queue, censuses and recode batches stay
+one cross-cluster lane (repair batches by cluster code, not by user, so
+per-shard demux would only fragment the launch buckets), but every
+metadata mutation a repair plan commits — index records, refcount
+moves, ``FileMeta`` entry rewrites — routes through the owning control
+shard via the store's ``ShardedChunkIndex``/``ShardedSwitchTable``
+facades, and the sanitizer's per-shard ledger check verifies each
+drain left every shard balanced.
+
 Disaster recovery extends the same machinery across clusters:
 
 * **cross-cluster re-placement** -- a chunk below ``k`` survivors on its

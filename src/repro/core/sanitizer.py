@@ -31,7 +31,11 @@ Three checks, mirroring the searslint static passes at runtime:
    slot.  Cross-cluster re-placement must therefore move record,
    refcounts, file entries and pieces as one step — a half-moved chunk
    (stale entries, leftover home pieces) trips this check at the next
-   window boundary.
+   window boundary.  On a sharded store the ledger is also checked
+   *per control shard*: every chunk record / switching table / binding
+   entry must live on its bucket owner and each shard's refcounts must
+   balance the live references to its own chunks, so a half-migrated
+   bucket or a write routed past the owner cannot hide in global sums.
 
 ``LAUNCHES`` is process-global, so the sanitizer *attributes* launches
 to its own store by bracketing every store code path that dispatches
@@ -128,9 +132,11 @@ class Sanitizer:
                 h.update(repr(p).encode())
                 h.update(b";")
 
-        for cid, copies in st.index._chunks.items():
-            for cl, info in copies.items():
-                feed(cid, cl, info.length, info.refcount)
+        smap = getattr(st, "shard_map", None)
+        if smap is not None:
+            feed(smap.topology())
+        for cid, cl, info in st.index.records():
+            feed(cid, cl, info.length, info.refcount)
         for user, sw in st.switching.items():
             for fname, meta in sw.table.items():
                 feed(user, fname, meta.timestamp, meta.entries,
@@ -228,9 +234,8 @@ class Sanitizer:
                 for key in set(meta.entries):
                     expected[key] = expected.get(key, 0) + 1
         recorded: dict[tuple[bytes, int], int] = {}
-        for cid, copies in st.index._chunks.items():
-            for cl, info in copies.items():
-                recorded[(cid, cl)] = info.refcount
+        for cid, cl, info in st.index.records():
+            recorded[(cid, cl)] = info.refcount
         if expected != recorded:
             extra = {k: v for k, v in recorded.items()
                      if expected.get(k) != v}
@@ -254,7 +259,55 @@ class Sanitizer:
                             f"orphan piece: cluster {c.cluster_id} node "
                             f"{node.node_id} holds a piece of chunk "
                             f"{cid.hex()} with no live index record")
+        self._check_shard_ledger(expected)
         self.checks += 1
+
+    def _check_shard_ledger(self, expected) -> None:
+        """Per-shard conservation: every record/table on its bucket owner.
+
+        Three invariants on a sharded store: (1) each chunk record lives
+        on the shard owning its chunk-id bucket, (2) each switching
+        table and binding entry lives on the shard owning its user
+        bucket, (3) each shard's refcounts balance exactly the live file
+        references to *its* chunks — a half-migrated bucket or a write
+        routed past the owner trips here at the next window boundary.
+        """
+        smap = getattr(self.store, "shard_map", None)
+        if smap is None:
+            return
+        for sid in smap.live_ids():
+            shard = smap.shards[sid]
+            shard_recorded: dict[tuple[bytes, int], int] = {}
+            for cid, cl, info in shard.index.records():
+                if smap.shard_of_chunk(cid) is not shard:
+                    raise SanitizerError(
+                        f"shard ledger: chunk {cid.hex()} record held by "
+                        f"shard {sid} but bucket "
+                        f"{smap.chunk_bucket(cid)} is owned by shard "
+                        f"{smap.shard_of_chunk(cid).shard_id}")
+                shard_recorded[(cid, cl)] = info.refcount
+            for user in shard.tables:
+                if smap.shard_of_user(user) is not shard:
+                    raise SanitizerError(
+                        f"shard ledger: switching table of {user!r} held "
+                        f"by shard {sid}, owner is shard "
+                        f"{smap.shard_of_user(user).shard_id}")
+            for cls_name, table in shard.bound.items():
+                for user in table:
+                    if smap.shard_of_user(user) is not shard:
+                        raise SanitizerError(
+                            f"shard ledger: {cls_name!r} binding of "
+                            f"{user!r} held by shard {sid}, owner is "
+                            f"shard {smap.shard_of_user(user).shard_id}")
+            shard_expected = {
+                key: refs for key, refs in expected.items()
+                if smap.shard_of_chunk(key[0]) is shard}
+            if shard_expected != shard_recorded:
+                raise SanitizerError(
+                    f"per-shard ledger out of conservation on shard "
+                    f"{sid}: {len(shard_recorded)} record(s) vs "
+                    f"{len(shard_expected)} expected from live file "
+                    "metadata")
 
     def check_window(self, label: str) -> None:
         self.check_launches(label)

@@ -238,6 +238,9 @@ class SchedulerStats:
     n_auto_flushes: int = 0  # flushes triggered by size/interval thresholds
     n_pipelined_windows: int = 0  # put windows whose chunk pass was issued
     #                               ahead, overlapping the previous window
+    n_shard_subwindows: int = 0  # per-shard data-plane sub-windows the
+    #                              put/get windows demuxed into (equals the
+    #                              window count on a 1-shard store)
     gf_launches: int = 0  # GF(256) launches issued during flushes
     sha1_launches: int = 0
     gear_launches: int = 0  # device chunking launches issued during flushes
@@ -276,7 +279,12 @@ class BatchScheduler:
     after a delete -- in the same flush still observes it).  Submits
     return :class:`RequestFuture` handles; a window may mix storage
     classes, and the shared batches bucket by (code, length) so the
-    launch count stays O(code buckets x length buckets).
+    launch count stays O(code buckets x length buckets).  On a sharded
+    store (``SEARSStore(shards=N)``) each put/get window further
+    demuxes its data-plane batches into per-shard sub-windows whose
+    device passes are issued back-to-back (concurrently in flight);
+    ``SchedulerStats.n_shard_subwindows`` counts them, and the bucket
+    bound above holds *per shard sub-window*.
 
     **Auto-flush**: with ``flush_bytes`` set, a submit that lifts the
     pending put payload to/over the threshold flushes the whole queue
@@ -442,6 +450,12 @@ class BatchScheduler:
         # across an intervening get/delete window -- cannot change any
         # window's outcome.
         begun: dict[int, object] = {}
+        # per-shard sub-window accounting: a put/get window on a sharded
+        # store demuxes its data-plane batches by owning user shard, and
+        # the begin seam issues every shard's device pass back-to-back
+        # (concurrent in-flight launches); count the demux so launch
+        # economics stay auditable per shard window
+        demux = getattr(self.store, "window_shards", None)
         for j, window in enumerate(windows):
             try:
                 if window[0].kind == PUT:
@@ -457,9 +471,15 @@ class BatchScheduler:
                                 break
                     self.store._put_window_finish(state)
                     self.stats.n_put_windows += 1
+                    if demux is not None:
+                        self.stats.n_shard_subwindows += len(
+                            demux([r.user for r in window]))
                 elif window[0].kind == GET:
                     self.store._batch_get(window)
                     self.stats.n_get_windows += 1
+                    if demux is not None:
+                        self.stats.n_shard_subwindows += len(
+                            demux([r.user for r in window]))
                 else:
                     self.store._batch_delete(window)
                     self.stats.n_delete_windows += 1

@@ -41,6 +41,22 @@ switching node); submits return ``RequestFuture`` handles that resolve at
 internally just one-request flushes of that machinery
 (``_batch_put``/``_batch_get``/``_batch_delete``).
 
+**Sharded control plane** (``SEARSStore(shards=N)``, or the
+``SEARS_SHARDS`` env var): the switching node's metadata — chunk index,
+per-user chunk-meta-data tables, binding tables — partitions across N
+``repro.core.shard.ControlShard`` slices under a headnode-style
+``ShardMap`` (chunk-id-prefix buckets for the index, user-hash buckets
+for tables; live ``add_shard``/``drain_shard`` migrates bucket state).
+Every put/get/delete/repair plan routes through the owning shard via
+the ``ShardedChunkIndex``/``ShardedSwitchTable`` facades, and each
+flush window's *data-plane* work demuxes into per-shard sub-windows
+(one gear/SHA-1/GF batch set per owning shard, issued back-to-back so
+the device overlaps them) while control-plane planning and assembly
+stay in global submission order — which is what keeps an N-shard store
+byte-identical to the 1-shard store (``tests/differential.py`` proves
+it).  Per-shard sub-windows keep the launch economics: O(code buckets
+x length buckets) launches per shard window, never O(chunks).
+
 Wall-clock retrieval time is simulated by ``repro.core.latency`` (no real
 network in this container); byte-level correctness is real -- every piece
 is stored, read back and decoded.
@@ -65,6 +81,8 @@ from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
                                  UploadPlan)
 from repro.core.repair import RepairManager, RepairReport
 from repro.core.sanitizer import Sanitizer, SanitizerError  # noqa: F401
+from repro.core.shard import (ShardedBindingSlice, ShardedChunkIndex,
+                              ShardedSwitchTable, ShardMap)
 
 
 @dataclasses.dataclass
@@ -144,15 +162,20 @@ class StoreStats:
 class PutWindowState:
     """An issued-but-unfinished put window (``_put_window_begin``).
 
-    ``pending`` is the engine's chunking token -- on the kernel engines
-    an in-flight device gear launch; ``error`` records a shared
+    ``groups`` is the window's per-shard demux -- ``[(shard_id,
+    [request index, ...]), ...]`` sorted by shard id, captured at begin
+    time so a shard add/drain between begin and finish cannot re-split
+    the in-flight window.  ``pending`` maps each group's shard id to
+    the engine's chunking token -- on the kernel engines an in-flight
+    device gear launch per shard sub-window; ``error`` records a shared
     begin-phase failure to be raised at finish time.
     """
 
     requests: list
     validated: list
     req_cls: list
-    pending: object
+    groups: list
+    pending: dict
     error: Exception | None = None
 
 
@@ -165,7 +188,8 @@ class SEARSStore:
                  engine: str | CodingEngine = "numpy",
                  classes: list[StorageClass] | None = None,
                  sanitize: bool | None = None,
-                 repair_bandwidth=None) -> None:
+                 repair_bandwidth=None,
+                 shards: int | None = None) -> None:
         legacy = [kw for kw, v in (("n", n), ("k", k),
                                    ("binding", binding),
                                    ("chunker", chunker))
@@ -204,12 +228,25 @@ class SEARSStore:
         # owning pool of a lost cluster's chunks
         self._cluster_pool: dict[int, str] = dict(owner)
         self._node_capacity = node_capacity
+        # sharded control plane: chunk index, switching tables and
+        # binding tables partition across ControlShards by key bucket;
+        # shards=1 (the default) is the degenerate single-slice case of
+        # the same code path.  SEARS_SHARDS provides the default so
+        # whole test suites can run sharded unchanged.
+        if shards is None:
+            shards = int(os.environ.get("SEARS_SHARDS", "1") or "1")
+        self.shard_map = ShardMap(shards)
         # per-class binding scheme instances (ULB assignment state is
-        # class-local: the same user may bind differently per class)
-        self._bindings = {c.name: make_binding(c.binding)
-                          for c in class_list}
-        self.index = dedup.ChunkIndex()
-        self.switching: dict[str, SwitchingNode] = {}
+        # class-local: the same user may bind differently per class);
+        # each ULB's per-user table is shard-routed, its round-robin
+        # cursor stays head-owned (see repro.core.shard)
+        self._bindings = {
+            c.name: make_binding(
+                c.binding,
+                storage=ShardedBindingSlice(self.shard_map, c.name))
+            for c in class_list}
+        self.index = ShardedChunkIndex(self.shard_map)
+        self.switching = ShardedSwitchTable(self.shard_map)
         self.latency = latency or LatencyParams()
         self.rng = np.random.default_rng(seed)
         self.hash_fn = hash_fn
@@ -284,6 +321,52 @@ class SEARSStore:
         if user not in self.switching:
             self.switching[user] = SwitchingNode(user)
         return self.switching[user]
+
+    # ------------------------------------------------- shard lifecycle ---
+    def add_shard(self) -> int:
+        """Bring a new control shard online (live scale-out).
+
+        The headnode map rebalances bucket ownership onto the newcomer
+        and migrates the affected index/table/binding state; no routing
+        decision changes, so traffic in flight (even a begun-but-
+        unfinished put window) commits byte-identically.  Returns the
+        new shard id.
+        """
+        return self.shard_map.add_shard().shard_id
+
+    def drain_shard(self, shard_id: int) -> None:
+        """Take a control shard out of service (live scale-in).
+
+        Its buckets — with their chunk records, switching tables and
+        binding entries — migrate to the surviving shards; the drained
+        id is retired forever (a later ``add_shard`` gets a fresh id and
+        starts empty, so stale state can never be re-admitted)."""
+        self.shard_map.drain_shard(shard_id)
+
+    def shard_of_user(self, user: str) -> int:
+        """Id of the control shard owning a user's tables and bindings."""
+        return self.shard_map.shard_of_user(user).shard_id
+
+    def window_shards(self, users) -> list[int]:
+        """Sorted owning-shard ids of a window's users (demux preview)."""
+        return sorted({self.shard_map.shard_of_user(u).shard_id
+                       for u in users})
+
+    def _window_groups(self, requests) -> list[tuple[int, list[int]]]:
+        """Demux a window's requests by owning user shard.
+
+        Returns ``[(shard_id, [request index, ...]), ...]`` sorted by
+        shard id, submit order kept within each group.  Data-plane
+        batches (gear/hash/encode/read/decode) run once per group — the
+        per-shard sub-windows — while control-plane planning and
+        assembly stay in global submission order, which is what keeps
+        an N-shard run byte-identical to the 1-shard run.
+        """
+        groups: dict[int, list[int]] = {}
+        for i, req in enumerate(requests):
+            sid = self.shard_map.shard_of_user(req.user).shard_id
+            groups.setdefault(sid, []).append(i)
+        return sorted(groups.items())
 
     # ------------------------------------------------------- scheduling ---
     def scheduler(self, queue=None, **kwargs):
@@ -407,13 +490,19 @@ class SEARSStore:
         san = self._sanitizer
         if san is None:
             return self._put_window_begin_impl(requests)
-        chunkers = set()
-        for req in requests:
-            try:
-                chunkers.add(self._class(req.storage_class).chunker)
-            except KeyError:
-                pass  # the impl fails this request; it chunks nothing
-        san.add_budget(gear=len(chunkers))
+        # per-shard launch model: one gear launch per distinct chunker
+        # per shard sub-window (each group chunks in its own pass)
+        gear = 0
+        for _sid, idxs in self._window_groups(requests):
+            chunkers = set()
+            for i in idxs:
+                try:
+                    chunkers.add(
+                        self._class(requests[i].storage_class).chunker)
+                except KeyError:
+                    pass  # the impl fails this request; it chunks nothing
+            gear += len(chunkers)
+        san.add_budget(gear=gear)
         return san.guard_begin("_put_window_begin",
                                self._put_window_begin_impl, requests)
 
@@ -434,16 +523,24 @@ class SEARSStore:
             validated.append(per_file)
             req_cls.append(cls)
 
-        window_jobs = [(cls.chunker, arr)
-                       for cls, per_file in zip(req_cls, validated)
-                       for _, _, arr in per_file]
-        pending, error = None, None
+        # per-shard sub-windows: one chunking pass per owning shard,
+        # issued back-to-back (the device overlaps the in-flight gear
+        # launches); the demux is captured in the state so a shard
+        # add/drain between begin and finish cannot re-split the window
+        groups = self._window_groups(requests)
+        pending: dict[int, object] = {}
+        error = None
         try:
-            pending = self.engine.chunk_blobs_multi_begin(window_jobs)
+            for sid, idxs in groups:
+                jobs = [(req_cls[i].chunker, arr)
+                        for i in idxs
+                        for _, _, arr in validated[i]]
+                pending[sid] = self.engine.chunk_blobs_multi_begin(jobs)
         except Exception as exc:
             error = exc
         return PutWindowState(requests=requests, validated=validated,
-                              req_cls=req_cls, pending=pending, error=error)
+                              req_cls=req_cls, groups=groups,
+                              pending=pending, error=error)
 
     def _put_window_finish(self, state: "PutWindowState") -> None:
         """Resolve an issued put window: hash/encode, plan, land pieces.
@@ -463,8 +560,10 @@ class SEARSStore:
         try:
             if state.error is not None:
                 raise state.error
-            window_spans = self.engine.chunk_blobs_multi_finish(
-                state.pending)
+            spans_by_group = {
+                sid: self.engine.chunk_blobs_multi_finish(
+                    state.pending[sid])
+                for sid, _ in state.groups}
         except Exception as exc:
             # shared chunk-pass failure: nothing planned or landed yet --
             # every live request in the window fails (mirrors the shared
@@ -474,44 +573,66 @@ class SEARSStore:
                     req.status, req.error = "failed", exc
             return
 
+        # scatter each shard sub-window's spans back onto its requests
+        spans_of: dict[int, list] = {}  # request index -> per-file spans
+        for sid, idxs in state.groups:
+            gspans = spans_by_group[sid]
+            pos = 0
+            for i in idxs:
+                spans_of[i] = gspans[pos:pos + len(validated[i])]
+                pos += len(validated[i])
+
         chunked: list[list[tuple[str, bytes, list[tuple[int, int]],
                                  list[bytes]]]] = []
-        all_chunks: list[bytes] = []
-        all_codes: list = []
-        blob_pos = 0
-        for req, cls, per_file in zip(requests, req_cls, validated):
+        for i, (req, cls, per_file) in enumerate(
+                zip(requests, req_cls, validated)):
             out = []
-            for filename, data, arr in per_file:
-                spans = window_spans[blob_pos]
-                blob_pos += 1
+            for (filename, data, arr), spans in zip(per_file, spans_of[i]):
                 chunks = [arr[o:o + l].tobytes() for o, l in spans]
                 out.append((filename, data, spans, chunks))
-                all_chunks.extend(chunks)
-                all_codes.extend([cls.code] * len(chunks))
             chunked.append(out)
 
-        if self._sanitizer is not None:
-            # hash + encode budget from the pre-dedup chunk list (dedup
-            # only shrinks the real launch count below the model)
-            self._sanitizer.add_put_budget(all_codes, all_chunks,
-                                           self.engine)
-
-        # hashing -- on a fused engine the window's chunks are hashed AND
-        # speculatively RS-encoded in the same device residency (one
-        # launch per piece-length bucket); pieces for chunks the dedup
-        # pass later rejects are simply dropped.  Staged engines hash
-        # here and encode in _execute_uploads as before.
+        # hashing, one batch per shard sub-window -- on a fused engine
+        # each group's chunks are hashed AND speculatively RS-encoded in
+        # the same device residency (one launch per piece-length bucket
+        # per group); pieces for chunks the dedup pass later rejects are
+        # simply dropped.  Staged engines hash here and encode in
+        # _execute_uploads as before.  Chunk ids are per-chunk
+        # deterministic, so the grouping changes launch counts, never
+        # bytes.
         precomputed: dict[tuple[int, int, bytes], list[bytes]] | None = None
+        fused = getattr(self.engine, "supports_fused_ingest", False)
+        if fused:
+            precomputed = {}
+        ids_of: dict[int, list[bytes]] = {}  # request index -> flat ids
         try:
-            if getattr(self.engine, "supports_fused_ingest", False):
-                all_ids, all_pieces = self.engine.hash_encode_blobs_multi(
-                    list(zip(all_codes, all_chunks)))
-                precomputed = {
-                    (code.n, code.k, cid): pieces
-                    for code, cid, pieces in zip(all_codes, all_ids,
-                                                 all_pieces)}
-            else:
-                all_ids = self.engine.hash_chunks(all_chunks)
+            for sid, idxs in state.groups:
+                g_chunks: list[bytes] = []
+                g_codes: list = []
+                for i in idxs:
+                    for _, _, _, chunks in chunked[i]:
+                        g_chunks.extend(chunks)
+                        g_codes.extend([req_cls[i].code] * len(chunks))
+                if self._sanitizer is not None:
+                    # hash + encode budget per shard sub-window, from the
+                    # pre-dedup chunk list (dedup only shrinks the real
+                    # launch count below the model)
+                    self._sanitizer.add_put_budget(g_codes, g_chunks,
+                                                   self.engine)
+                if fused:
+                    g_ids, g_pieces = self.engine.hash_encode_blobs_multi(
+                        list(zip(g_codes, g_chunks)))
+                    precomputed.update(
+                        {(code.n, code.k, cid): pieces
+                         for code, cid, pieces in zip(g_codes, g_ids,
+                                                      g_pieces)})
+                else:
+                    g_ids = self.engine.hash_chunks(g_chunks)
+                pos = 0
+                for i in idxs:
+                    n = sum(len(chunks) for _, _, _, chunks in chunked[i])
+                    ids_of[i] = g_ids[pos:pos + n]
+                    pos += n
         except Exception as exc:
             # shared hash batch failure: same blast radius as the chunk
             # pass -- nothing planned yet, fail the whole window
@@ -522,18 +643,19 @@ class SEARSStore:
 
         # control plane: plan request by request in submit order (so later
         # requests dedup against chunks introduced by earlier ones, exactly
-        # like sequential calls); a failure unwinds only its own request
+        # like sequential calls -- across shard groups too); a failure
+        # unwinds only its own request
         plans_by_req: dict[int, list[UploadPlan]] = {}
-        pos = 0
-        for req, cls, per_file in zip(requests, req_cls, chunked):
+        for i, (req, cls, per_file) in enumerate(
+                zip(requests, req_cls, chunked)):
             if req.error is not None:
                 continue
             plans: list[UploadPlan] = []
-            req_pos = pos
-            pos += sum(len(spans) for _, _, spans, _ in per_file)
+            ids_flat = ids_of[i]
+            req_pos = 0
             try:
                 for filename, data, spans, chunks in per_file:
-                    ids = all_ids[req_pos:req_pos + len(spans)]
+                    ids = ids_flat[req_pos:req_pos + len(spans)]
                     req_pos += len(spans)
                     plans.append(self._plan_put(
                         req.user, filename, data, spans, ids, chunks,
@@ -549,19 +671,40 @@ class SEARSStore:
                 self._rollback_files(req.user, plans)
                 req.status, req.error = "failed", exc
 
-        # data plane: one shared encode batch per code + bulk piece writes
+        # data plane: per shard sub-window, one shared encode batch per
+        # code + bulk piece writes.  Encoding is content-deterministic,
+        # so per-group batches land byte-identical pieces; failed copies
+        # union across groups because a request may dedup against a
+        # window-mate on another shard.
         live = [r for r in requests if r.error is None]
-        all_plans = [p for r in live for p in plans_by_req[r.request_id]]
-        try:
-            failed_copies, write_error = self._execute_uploads(
-                all_plans, precomputed=precomputed)
-        except Exception as exc:
-            # encode-batch failure: nothing landed, reservations already
-            # released -- every request in the window rolls back
-            for req in live:
-                self._rollback_files(req.user, plans_by_req[req.request_id])
-                req.status, req.error = "failed", exc
-            return
+        failed_copies: set[tuple[bytes, int]] = set()
+        write_error: Exception | None = None
+        for gi, (sid, idxs) in enumerate(state.groups):
+            g_plans = [p for i in idxs
+                       if requests[i].error is None
+                       for p in plans_by_req[requests[i].request_id]]
+            try:
+                fc, we = self._execute_uploads(g_plans,
+                                               precomputed=precomputed)
+            except Exception as exc:
+                # encode-batch failure: this group's reservations are
+                # already released; release the not-yet-executed groups'
+                # before rolling the whole window back
+                for sid2, idxs2 in state.groups[gi + 1:]:
+                    for i2 in idxs2:
+                        if requests[i2].error is not None:
+                            continue
+                        for p in plans_by_req[requests[i2].request_id]:
+                            for t in p.encode_tasks:
+                                cl = self.clusters[t.cluster_id]
+                                cl.release_reservation(cl.n * t.piece_len)
+                for req in live:
+                    self._rollback_files(req.user,
+                                         plans_by_req[req.request_id])
+                    req.status, req.error = "failed", exc
+                return
+            failed_copies |= fc
+            write_error = write_error or we
 
         for req in live:
             plans = plans_by_req[req.request_id]
@@ -902,23 +1045,35 @@ class SEARSStore:
             except Exception as exc:
                 req.status, req.error = "failed", exc
 
-        # data plane: bulk piece reads per cluster across every request;
-        # reads have no store side effects, so an infrastructure failure
-        # here fails the window's requests instead of raising out of a
-        # flush whose queue was already drained
+        # data plane: per shard sub-window, bulk piece reads per cluster
+        # across the group's requests; reads have no store side effects,
+        # so an infrastructure failure here fails the window's requests
+        # instead of raising out of a flush whose queue was already
+        # drained.  The demux keeps per-shard windows' read batches
+        # independent while the task list (and therefore the read-repair
+        # hint order below) stays in global submission order.
         live = [r for r in requests if r.error is None]
+        req_groups: dict[int, list] = {}
+        for r in live:
+            sid = self.shard_map.shard_of_user(r.user).shard_id
+            req_groups.setdefault(sid, []).append(r)
+        groups = sorted(req_groups.items())
         try:
             all_tasks = [t for r in live for p in plans_by_req[r.request_id]
                          for t in p.fetch_tasks]
-            by_cluster: dict[int, list[FetchTask]] = {}
-            for t in all_tasks:
-                by_cluster.setdefault(t.cluster_id, []).append(t)
-            for cluster_id, tasks in by_cluster.items():
-                got = self.clusters[cluster_id].read_pieces_batch(
-                    [t.chunk_id for t in tasks],
-                    self.clusters[cluster_id].k)
-                for t in tasks:
-                    t.pieces = got[t.chunk_id]
+            for sid, greqs in groups:
+                by_cluster: dict[int, list[FetchTask]] = {}
+                for r in greqs:
+                    for p in plans_by_req[r.request_id]:
+                        for t in p.fetch_tasks:
+                            by_cluster.setdefault(t.cluster_id,
+                                                  []).append(t)
+                for cluster_id, tasks in by_cluster.items():
+                    got = self.clusters[cluster_id].read_pieces_batch(
+                        [t.chunk_id for t in tasks],
+                        self.clusters[cluster_id].k)
+                    for t in tasks:
+                        t.pieces = got[t.chunk_id]
         except Exception as exc:
             for req in live:
                 req.status, req.error = "failed", exc
@@ -947,31 +1102,39 @@ class SEARSStore:
                             f"{len(t.pieces)} (chunk {t.chunk_id.hex()})")
         live = [r for r in live if r.error is None]
 
-        # shared decode, deduplicated and bucketed by the owning cluster's
-        # code: a chunk referenced by several tasks (cross-user or
-        # cross-file redundancy) is decoded once and the blob fanned back
-        # out to every referencing plan
-        uniq: dict[tuple[bytes, int], FetchTask] = {}
-        for req in live:
-            for p in plans_by_req[req.request_id]:
-                for t in p.fetch_tasks:
-                    uniq.setdefault((t.chunk_id, t.cluster_id), t)
-        jobs = [(self.clusters[t.cluster_id].code, t.pieces, t.length)
-                for t in uniq.values()]
+        # shared decode per shard sub-window, deduplicated within the
+        # group and bucketed by the owning cluster's code: a chunk
+        # referenced by several of the group's tasks (cross-user or
+        # cross-file redundancy) is decoded once and the blob fanned
+        # back out to every referencing plan.  Decodes are
+        # content-deterministic, so a chunk shared across groups decodes
+        # to identical bytes in each.
+        blob_by_key: dict[tuple[bytes, int], bytes] = {}
         try:
-            if self._sanitizer is not None:
-                # same decode model as _get_window_begin: one GF launch
-                # per unique chunk is the ceiling, bucketing stays below
-                self._sanitizer.add_budget(gf=len(jobs))
-                blobs = self._sanitizer.track(
-                    self.engine.decode_blobs_multi, jobs)
-            else:
-                blobs = self.engine.decode_blobs_multi(jobs)
+            for sid, greqs in groups:
+                uniq: dict[tuple[bytes, int], FetchTask] = {}
+                for req in greqs:
+                    if req.error is not None:
+                        continue
+                    for p in plans_by_req[req.request_id]:
+                        for t in p.fetch_tasks:
+                            uniq.setdefault((t.chunk_id, t.cluster_id), t)
+                jobs = [(self.clusters[t.cluster_id].code, t.pieces,
+                         t.length) for t in uniq.values()]
+                if self._sanitizer is not None:
+                    # same decode model as _get_window_begin, per shard
+                    # sub-window: one GF launch per unique chunk is the
+                    # ceiling, bucketing stays below
+                    self._sanitizer.add_budget(gf=len(jobs))
+                    blobs = self._sanitizer.track(
+                        self.engine.decode_blobs_multi, jobs)
+                else:
+                    blobs = self.engine.decode_blobs_multi(jobs)
+                blob_by_key.update(zip(uniq, blobs))
         except Exception as exc:
             for req in live:
                 req.status, req.error = "failed", exc
             return
-        blob_by_key = dict(zip(uniq, blobs))
 
         # assemble + stats per file, fanned back out per request (a bad
         # per-request rho_fn fails only its own request)

@@ -330,6 +330,92 @@ def mixed_class_trace(cfg: MixedClassConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardTraceConfig:
+    """Trace shape for the N-shard-vs-1-shard differential harness.
+
+    Many users issue interleaved put/get/overwrite/delete ops whose
+    content draws on a cross-user shared pool, so dedup hits routinely
+    cross user (and therefore control-shard) boundaries -- the traffic
+    that would expose any shard-count dependence in dedup, binding, or
+    placement.  ``add_shard_at``/``drain_shard_at`` splice shard
+    lifecycle ops into the stream at fixed positions; the differential
+    replays them only against the sharded store and still demands
+    byte-identical artifacts.
+    """
+
+    n_users: int = 6
+    n_ops: int = 24
+    files_per_put: int = 2
+    file_kb: int = 32
+    overwrite_fraction: float = 0.3  # of puts that rewrite a live file
+    shared_fraction: float = 0.4  # of file bytes from the shared pool
+    block: int = 8 << 10
+    seed: int = 61
+    add_shard_at: int = -1  # op position to bring a shard online (-1: never)
+    drain_shard_at: int = -1  # op position to drain a live shard (-1: never)
+
+
+def multi_shard_trace(cfg: ShardTraceConfig) -> list[tuple]:
+    """Deterministic mixed-op trace for the shard differential.
+
+    Returns ops in replay order:
+
+    * ``("put", user, [(filename, blob), ...])``
+    * ``("get", user, [filename, ...])``
+    * ``("delete", user, filename)``
+    * ``("add_shard",)`` -- bring one fresh shard online
+    * ``("drain_shard", rank)`` -- drain the ``rank``-th live shard
+      (by sorted shard id) at replay time
+
+    Lifecycle ops are *advisory*: replaying against a 1-shard baseline
+    skips them, and the differential proof is that skipping vs applying
+    them changes nothing observable.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    pool = _BlockPool(rng, cfg.block, count=256)
+    users = [f"user{u}" for u in range(cfg.n_users)]
+    live: dict[str, list[str]] = {u: [] for u in users}
+    file_counter = 0
+    ops: list[tuple] = []
+    for _ in range(cfg.n_ops):
+        user = users[int(rng.integers(cfg.n_users))]
+        roll = rng.random()
+        if roll < 0.5 or not live[user]:
+            files: list[tuple[str, bytes]] = []
+            batch_names: set[str] = set()
+            for _f in range(cfg.files_per_put):
+                name = ""
+                if live[user] and rng.random() < cfg.overwrite_fraction:
+                    name = live[user][int(rng.integers(len(live[user])))]
+                if not name or name in batch_names:
+                    name = f"{user}/f{file_counter}"
+                    live[user].append(name)
+                batch_names.add(name)
+                file_counter += 1
+                blob = _mixed_bytes(cfg.seed * 3_000_017 + file_counter,
+                                    cfg.file_kb << 10, pool,
+                                    cfg.shared_fraction, cfg.block)
+                files.append((name, blob))
+            ops.append(("put", user, files))
+        elif roll < 0.85:
+            n_get = min(len(live[user]), 2)
+            picks = rng.choice(len(live[user]), size=n_get, replace=False)
+            ops.append(("get", user, [live[user][int(j)] for j in
+                                      sorted(int(j) for j in picks)]))
+        else:
+            victim = live[user].pop(int(rng.integers(len(live[user]))))
+            ops.append(("delete", user, victim))
+    out: list[tuple] = []
+    for i, op in enumerate(ops):
+        if i == cfg.add_shard_at:
+            out.append(("add_shard",))
+        if i == cfg.drain_shard_at:
+            out.append(("drain_shard", 0))
+        out.append(op)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
 class StormConfig:
     """Shape of a seeded failure storm over an (n, k) multi-cluster store.
 

@@ -4,13 +4,18 @@ Placement, binding and window demux must be replayable: two runs over
 the same trace must produce byte-identical plans, and the pipelined
 differential proofs compare exactly that.  Iterating a ``set`` (hash
 order) anywhere a plan is built breaks it silently.  This pass flags,
-in ``store.py`` / ``scheduler.py`` / ``repair.py``:
+in ``store.py`` / ``scheduler.py`` / ``repair.py`` / ``shard.py``:
 
 - ``for``/comprehension iteration over set literals, set
   comprehensions, ``set()``/``frozenset()`` calls, set-typed locals, or
   set algebra results;
 - iteration over known set-returning storage APIs
   (``ChunkIndex.cluster_chunks``);
+- iteration over shard-membership attributes (``.shards`` and its
+  ``.keys()/.values()/.items()`` views): ``ShardMap.shards`` insertion
+  order reflects add/drain history, not shard id order, so any
+  ownership or window-demux decision built from it is non-replayable —
+  route through ``live_ids()`` or wrap in ``sorted(...)``;
 
 ``sorted(...)`` around the source is the sanctioned fix (membership
 tests are fine and not flagged).
@@ -24,9 +29,10 @@ from repro.lint.core import Finding, Module, Program, dotted
 
 RULE = "plan-determinism"
 
-STEMS = {"store", "scheduler", "repair"}
+STEMS = {"store", "scheduler", "repair", "shard"}
 SET_BUILTINS = {"set", "frozenset"}
 SET_APIS = {"cluster_chunks"}
+SET_ATTRS = {"shards"}  # membership maps: insertion order != shard id order
 PASSTHROUGH = {"list", "tuple", "iter", "reversed"}  # preserve (dis)order
 SET_OPS = (ast.BitOr, ast.BitAnd, ast.BitXor, ast.Sub)
 
@@ -56,12 +62,18 @@ def _is_setish(expr: ast.AST, set_names: set[str]) -> bool:
         return True
     if isinstance(expr, ast.Name):
         return expr.id in set_names
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in SET_ATTRS
     if isinstance(expr, ast.Call):
         name = dotted(expr.func)
         if name is None:
             return False
-        last = name.split(".")[-1]
+        parts = name.split(".")
+        last = parts[-1]
         if last in SET_BUILTINS or last in SET_APIS:
+            return True
+        if (last in {"keys", "values", "items"} and len(parts) >= 2
+                and parts[-2] in SET_ATTRS):
             return True
         if last in PASSTHROUGH and expr.args:
             return _is_setish(expr.args[0], set_names)

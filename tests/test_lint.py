@@ -262,6 +262,30 @@ def scan(self, cluster_id):
     assert len(live(findings, "plan-determinism")) == 2
 
 
+def test_determinism_catches_shard_membership_iteration():
+    """ShardMap.shards iteration (plain or via dict views) feeds routing
+    order from add/drain insertion order — flagged unless sorted."""
+    findings = lint_sources({"src/repro/core/shard.py": """
+def route(self):
+    for sid in self.shard_map.shards:
+        self.touch(sid)
+    out = [sh for sh in self.shard_map.shards.values()]
+    return out
+"""})
+    assert len(live(findings, "plan-determinism")) == 2
+
+
+def test_determinism_sorted_shard_iteration_is_clean():
+    findings = lint_sources({"src/repro/core/store.py": """
+def route(self):
+    for sid in sorted(self.shard_map.shards):
+        self.touch(sid)
+    ok = 3 in self.shard_map.shards  # membership, not iteration
+    return ok
+"""})
+    assert not live(findings, "plan-determinism")
+
+
 def test_determinism_sorted_wrapping_and_membership_are_fine():
     findings = lint_sources({"src/repro/core/repair.py": """
 def scan(self, cluster_id, scope):

@@ -147,10 +147,10 @@ def test_per_chunk_dispatch_breaks_launch_model():
 def test_refcount_forgery_breaks_ledger():
     s = _store()
     s.put_files("u", _files(n_files=2))
-    (cid, copies), = [next(iter(s.index._chunks.items()))]
+    cid, _cl, info = next(s.index.records())
 
     def forge_and_flush():
-        next(iter(copies.values())).refcount += 1
+        info.refcount += 1
         s.put_file("u", "trigger", _data(8_000, seed=42))
 
     with pytest.raises(SanitizerError, match="ledger"):

@@ -137,16 +137,22 @@ def test_coalesced_cross_user_dedup_under_clb():
 
 
 def test_scheduler_counts_shared_launches():
-    """One flush window shares SHA-1/GF launches across all users."""
+    """One flush window shares SHA-1/GF launches across all users.
+
+    On a sharded store (SEARS_SHARDS>1) the window demuxes into one
+    sub-window per owning shard, so the bound is per shard sub-window:
+    every shard group's chunks fit one fixed-shape SHA-1 launch.
+    """
     files_by_user = _multi_user_files(n_users=4)
     s = _store(engine="kernel")
     sched = s.scheduler()
     for u, fs in files_by_user.items():
         sched.submit_put(u, fs)
+    n_shards = len(s.window_shards(files_by_user))
     sched.flush()
-    # every user's chunks fit one fixed-shape SHA-1 launch
-    assert sched.stats.sha1_launches == 1
+    assert sched.stats.sha1_launches == n_shards
     assert sched.stats.n_put_windows == 1
+    assert sched.stats.n_shard_subwindows == n_shards
     assert sched.stats.gf_launches >= 1
 
 
