@@ -1,9 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-slow test-fast test-launches test-shards lint bench \
-	bench-pipeline bench-smoke bench-repair bench-disaster bench-classes \
-	bench-shards headline
+.PHONY: test test-slow test-fast test-launches test-shards test-cache \
+	lint bench bench-pipeline bench-smoke bench-repair bench-disaster \
+	bench-classes bench-shards bench-slo headline
 
 # tier-1 verification command (slow interpret-mode kernel tests are
 # deselected by pytest.ini; run them with `make test-slow`)
@@ -34,8 +34,17 @@ test-shards:
 	SEARS_SANITIZE=1 SEARS_SHARDS=3 $(PYTHON) -m pytest -x -q \
 		tests/test_store.py tests/test_scheduler.py
 
+# block-cache lane: BlockCache mechanics, write-back ack/drain/delete
+# ordering, shard-drain + cluster-loss barriers, scheduler priority
+# lanes + admission control, and the cache-on-vs-off differential
+# proof -- then the whole suite again with the runtime sanitizer's
+# cache-ledger audit live on every window
+test-cache:
+	$(PYTHON) -m pytest -x -q tests/test_cache.py
+	SEARS_SANITIZE=1 $(PYTHON) -m pytest -x -q tests/test_cache.py
+
 # searslint: begin-purity, dispatch hygiene, counter coverage, plan
-# determinism (exits 1 on any unwaivered finding)
+# determinism, cache discipline (exits 1 on any unwaivered finding)
 lint:
 	$(PYTHON) -m repro.lint src tests benchmarks
 
@@ -47,7 +56,8 @@ test-fast:
 		tests/test_disaster.py \
 		tests/test_gf256_rs.py tests/test_chunking_hashing.py \
 		tests/test_workload_binding.py tests/test_system.py \
-		tests/test_lint.py tests/test_sanitizer.py tests/test_shards.py
+		tests/test_lint.py tests/test_sanitizer.py tests/test_shards.py \
+		tests/test_cache.py
 
 # full paper-claim benchmark battery (results/bench.json)
 bench:
@@ -58,11 +68,12 @@ bench-pipeline:
 	$(PYTHON) -m benchmarks.run --only pipeline_bench
 
 # quick CI smoke: data-plane pipeline + cross-user scheduler + control
-# sharding + storm repair + disaster recovery + storage-class benchmarks
-# (BENCH_pipeline.json + BENCH_scheduler.json + BENCH_shard.json +
-# BENCH_repair.json + BENCH_disaster.json + BENCH_classes.json)
+# sharding + storm repair + disaster recovery + storage-class + block
+# cache/SLO benchmarks (BENCH_pipeline.json + BENCH_scheduler.json +
+# BENCH_shard.json + BENCH_repair.json + BENCH_disaster.json +
+# BENCH_classes.json + BENCH_slo.json)
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,shard_bench,repair_bench,disaster_bench,class_bench
+	$(PYTHON) -m benchmarks.run --only pipeline_bench,scheduler_bench,shard_bench,repair_bench,disaster_bench,class_bench,slo_bench
 
 # failure-storm repair: per-chunk vs batched cross-cluster rebuild on
 # both engines (BENCH_repair.json)
@@ -78,6 +89,12 @@ bench-disaster:
 # mixed-window launch economics on both engines (BENCH_classes.json)
 bench-classes:
 	$(PYTHON) -m benchmarks.run --only class_bench
+
+# block cache & SLO: zipf cache-hit latency, write-back put-ack
+# deferral, and the two-class admission-control knee sweep
+# (BENCH_slo.json)
+bench-slo:
+	$(PYTHON) -m benchmarks.run --only slo_bench
 
 # control-plane sharding: 1/2/4-shard flush windows must produce
 # byte-identical artifacts at O(buckets)-per-sub-window launch cost

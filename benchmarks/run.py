@@ -27,6 +27,7 @@ MODULES = [
     "shard_bench",
     "repair_bench",
     "disaster_bench",
+    "slo_bench",
     "class_bench",
     "kernel_bench",
     "checkpoint_bench",

@@ -1,0 +1,359 @@
+"""Block cache & SLO: hit latency, write-back ack, admission-control knee.
+
+Three measurement families for the switching-node block cache and the
+scheduler's per-class priority lanes:
+
+* ``cache``    -- the million-user zipf trace (`zipf_slo_trace`) replayed
+  against a cache-less store and a cache-enabled one.  The hot catalog
+  is archival/CLB, so a cold get pays the cross-cluster ``t_search``
+  fan-out on every repeat while a cache hit streams from the switching
+  node at client NIC rate -- the headline p50 speedup.
+* ``writeback``-- wall-clock put-acknowledge medians, write-through vs
+  write-back: a write-back put commits to the cache (index + meta +
+  reservation, hash only on the data plane) and defers encode+store to
+  the background drain, so the ack must be strictly cheaper.  The flush
+  afterwards is verified byte-identical.
+* ``overload`` -- a closed-loop two-class rate sweep through a
+  ``BatchScheduler(lanes=True, max_pending=...)``: archival demand rises
+  window over window until past the knee while a fixed realtime flow
+  rides the same scheduler.  A demand-driven rho closure feeds admitted
+  bytes back into retrieval congestion, so shedding archival load is
+  what keeps realtime latency flat.  A no-admission arm at peak rate
+  proves the control is load-bearing.
+
+Results land in ``BENCH_slo.json``.  ``check()`` fails the run if the
+cache-hit p50 speedup drops below ``CACHE_SPEEDUP_MIN``x, if a
+write-back ack is not faster than a write-through ack, if realtime p99
+under peak overload exceeds ``SLO_FACTOR``x its unloaded baseline, if
+archival sheds nothing at peak (the sweep never found the knee), if any
+class's offered != done + rejected accounting, or if the no-admission
+arm does NOT blow the realtime budget.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import calibrated_params
+from repro.core.cache import CacheConfig
+from repro.core.classes import StorageClass
+from repro.core.scheduler import AdmissionError, BatchScheduler
+from repro.core.store import SEARSStore
+from repro.core.workload import SLOTraceConfig, zipf_slo_trace
+
+_OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "BENCH_slo.json")
+
+CACHE_SPEEDUP_MIN = 5.0  # cold p50 / hit p50 floor (the tentpole gate)
+SLO_FACTOR = 1.5  # realtime p99 under overload vs unloaded baseline
+WINDOW_CAP_BYTES = 1.5e6  # modeled per-window absorbable demand (rho box)
+
+
+def _pctl(xs: list[float], q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(round(q * (len(ys) - 1))))]
+
+
+def _archival_store(engine: str, cache) -> SEARSStore:
+    return SEARSStore(classes=[StorageClass.archival()], num_clusters=6,
+                      node_capacity=1 << 30, sanitize=False,
+                      latency=calibrated_params(), engine=engine,
+                      cache=cache)
+
+
+# ------------------------------------------------------------------ cache --
+def _bench_cache(engine: str, quick: bool) -> dict:
+    cfg = SLOTraceConfig(n_ops=120 if quick else 400,
+                         catalog_files=12 if quick else 32)
+    ops = zipf_slo_trace(cfg)
+    cls = cfg.storage_class
+
+    def replay(store):
+        cold_times, hit_times, partial = [], [], 0
+        for op in ops:
+            if op[0] == "put":
+                store.put_files(op[1], op[2], storage_class=cls)
+                continue
+            for _, st in store.get_files(op[1], op[2], storage_class=cls):
+                if st.n_cache_hits == st.n_chunks:
+                    hit_times.append(st.time_s)
+                elif st.n_cache_hits:
+                    partial += 1
+                else:
+                    cold_times.append(st.time_s)
+        return cold_times, hit_times, partial
+
+    cold_all, none_hit, _ = replay(_archival_store(engine, cache=False))
+    assert not none_hit, "cache-less store reported cache hits"
+    cached_store = _archival_store(
+        engine, cache=CacheConfig(capacity_bytes=32 << 20))
+    miss_times, hit_times, n_partial = replay(cached_store)
+    cstats = cached_store.stats().cache
+    p50_cold = _pctl(cold_all, 0.50)
+    p50_hit = _pctl(hit_times, 0.50) if hit_times else float("inf")
+    return {
+        "name": f"slo_cache/{engine}",
+        "engine": engine,
+        "n_gets_cold_arm": len(cold_all),
+        "n_full_hits": len(hit_times),
+        "n_partial_hits": n_partial,
+        "n_misses": len(miss_times),
+        "hit_ratio": round(cstats.hit_ratio, 3),
+        "p50_cold_s": round(p50_cold, 4),
+        "p99_cold_s": round(_pctl(cold_all, 0.99), 4),
+        "p50_hit_s": round(p50_hit, 4),
+        "p99_hit_s": round(_pctl(hit_times, 0.99), 4) if hit_times else None,
+        "speedup_p50": round(p50_cold / max(1e-9, p50_hit), 2),
+    }
+
+
+# -------------------------------------------------------------- writeback --
+def _bench_writeback(engine: str, quick: bool) -> dict:
+    import numpy as np
+    n_files = 6 if quick else 12
+    kb = 96 if quick else 192
+    files = [(f"wb/f{i}",
+              np.random.default_rng(91 + i).integers(
+                  0, 256, size=kb << 10, dtype=np.int64)
+              .astype(np.uint8).tobytes())
+             for i in range(n_files)]
+
+    def ack_times(store):
+        out = []
+        for fn, blob in files:
+            t0 = time.perf_counter()
+            store.put_file("u", fn, blob)
+            out.append(time.perf_counter() - t0)
+        return out
+
+    wt_store = _archival_store(engine, cache=False)
+    ack_times(wt_store)  # untimed warmup (jit caches, allocator)
+    wt_store = _archival_store(engine, cache=False)
+    wt = ack_times(wt_store)
+    wb_store = _archival_store(
+        engine, cache=CacheConfig(capacity_bytes=64 << 20, write_back=True))
+    wb = ack_times(wb_store)
+    dirty_before = wb_store.cache.dirty_count
+    t0 = time.perf_counter()
+    drained = wb_store.flush()
+    flush_s = time.perf_counter() - t0
+    for fn, blob in files:
+        got, _ = wb_store.get_file("u", fn)
+        assert got == blob, f"write-back corrupted {fn}"
+    return {
+        "name": f"slo_writeback/{engine}",
+        "engine": engine,
+        "n_files": n_files,
+        "file_kb": kb,
+        "ack_p50_writethrough_s": round(_pctl(wt, 0.50), 5),
+        "ack_p50_writeback_s": round(_pctl(wb, 0.50), 5),
+        "ack_speedup_p50": round(_pctl(wt, 0.50) / max(1e-9, _pctl(wb, 0.50)),
+                                 2),
+        "dirty_chunks_at_flush": dirty_before,
+        "chunks_drained": drained,
+        "flush_s": round(flush_s, 4),
+        "identical_after_flush": True,
+    }
+
+
+# --------------------------------------------------------------- overload --
+def _two_class_store() -> SEARSStore:
+    return SEARSStore(classes=[StorageClass.realtime(),
+                               StorageClass.archival()],
+                      num_clusters=8, node_capacity=1 << 30, sanitize=False,
+                      latency=calibrated_params(), engine="numpy")
+
+
+def _overload_arm(rates: list[int], quick: bool, admission: bool) -> dict:
+    """One closed-loop sweep: fixed realtime flow + rising archival rate.
+
+    Demand-driven congestion: each window's *admitted* get bytes set the
+    rho every next-window connection is charged (``WINDOW_CAP_BYTES`` is
+    the modeled absorbable demand).  With admission on, archival sheds
+    under backpressure and the box stays cool; with it off, everything
+    is admitted and realtime drowns with the rest.
+    """
+    import numpy as np
+    store = _two_class_store()
+    now = [0.0]
+    sched = BatchScheduler(
+        store, clock=lambda: now[0], lanes=True,
+        max_pending=8 if admission else None)
+    rt_files = [(f"rt/f{i}",
+                 np.random.default_rng(7 + i).integers(
+                     0, 256, size=24 << 10, dtype=np.int64)
+                 .astype(np.uint8).tobytes()) for i in range(3)]
+    arc_files = [(f"arc/f{i}",
+                  np.random.default_rng(57 + i).integers(
+                      0, 256, size=48 << 10, dtype=np.int64)
+                  .astype(np.uint8).tobytes()) for i in range(4)]
+    n_rt_users = 3
+    n_arc_users = 12
+    for u in range(n_rt_users):
+        store.put_files(f"rt{u}", rt_files, storage_class="realtime")
+    for u in range(n_arc_users):
+        store.put_files(f"arc{u}", arc_files, storage_class="archival")
+
+    box = {"prev": 0.0}  # admitted get bytes of the previous window
+
+    def rho_fn(cluster_id: int) -> float:
+        return min(0.95, box["prev"] / WINDOW_CAP_BYTES)
+
+    windows_per_rate = 4 if quick else 8
+    per_rate: dict[int, dict] = {}
+    offered = {"realtime": 0, "archival": 0}
+    done = {"realtime": 0, "archival": 0}
+    rejected = {"realtime": 0, "archival": 0}
+    failed_other = {"realtime": 0, "archival": 0}
+    for rate in rates:
+        rt_times: list[float] = []
+        arc_times: list[float] = []
+        for w in range(windows_per_rate):
+            futs: list[tuple[str, object]] = []
+            # archival flood first, then the realtime flow -- the lanes
+            # must reorder, and realtime submits shed queued archival
+            for j in range(rate):
+                u = f"arc{(w * rate + j) % n_arc_users}"
+                fn = arc_files[(w + j) % len(arc_files)][0]
+                futs.append(("archival", sched.submit_get(
+                    u, [fn], rho_fn=rho_fn, storage_class="archival")))
+            for u in range(n_rt_users):
+                fn = rt_files[w % len(rt_files)][0]
+                futs.append(("realtime", sched.submit_get(
+                    f"rt{u}", [fn], rho_fn=rho_fn,
+                    storage_class="realtime")))
+            sched.flush()
+            admitted_bytes = 0
+            for klass, fut in futs:
+                offered[klass] += 1
+                err = fut.error
+                if err is None and fut.ok:
+                    done[klass] += 1
+                    for _, st in fut.request.result:
+                        admitted_bytes += st.file_bytes
+                        (rt_times if klass == "realtime"
+                         else arc_times).append(st.time_s)
+                elif isinstance(err, AdmissionError):
+                    rejected[klass] += 1
+                else:
+                    failed_other[klass] += 1
+            box["prev"] = admitted_bytes
+            now[0] += 1.0
+        per_rate[rate] = {
+            "rt_p50_s": round(_pctl(rt_times, 0.50), 4) if rt_times else None,
+            "rt_p99_s": round(_pctl(rt_times, 0.99), 4) if rt_times else None,
+            "arc_p50_s": (round(_pctl(arc_times, 0.50), 4)
+                          if arc_times else None),
+            "arc_p99_s": (round(_pctl(arc_times, 0.99), 4)
+                          if arc_times else None),
+            "arc_done": len(arc_times),
+        }
+        box["prev"] = 0.0  # cool the box between rates
+    return {
+        "admission": admission,
+        "per_rate": {str(r): v for r, v in per_rate.items()},
+        "offered": offered,
+        "done": done,
+        "rejected": rejected,
+        "failed_other": failed_other,
+        "n_admission_shed": sched.stats.n_admission_shed,
+        "n_admission_rejected": sched.stats.n_admission_rejected,
+        "baseline_rt_p99_s": per_rate[rates[0]]["rt_p99_s"],
+        "peak_rt_p99_s": per_rate[rates[-1]]["rt_p99_s"],
+    }
+
+
+def _bench_overload(quick: bool) -> dict:
+    rates = [1, 4, 16, 48]
+    on = _overload_arm(rates, quick, admission=True)
+    off = _overload_arm([rates[0], rates[-1]], quick, admission=False)
+    base = on["baseline_rt_p99_s"]
+    return {
+        "name": "slo_overload/two_class",
+        "rates_per_window": rates,
+        "slo_factor": SLO_FACTOR,
+        "window_cap_bytes": WINDOW_CAP_BYTES,
+        "admission_on": on,
+        "admission_off": off,
+        "rt_p99_over_baseline_on": round(
+            on["peak_rt_p99_s"] / max(1e-9, base), 3),
+        "rt_p99_over_baseline_off": round(
+            off["peak_rt_p99_s"] / max(1e-9, off["baseline_rt_p99_s"]), 3),
+    }
+
+
+# -------------------------------------------------------------- run/check --
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    for engine in ("numpy",):
+        rows.append(_bench_cache(engine, quick))
+        rows.append(_bench_writeback(engine, quick))
+    rows.append(_bench_overload(quick))
+    with open(_OUT, "w") as f:
+        json.dump({"cache_speedup_min": CACHE_SPEEDUP_MIN,
+                   "slo_factor": SLO_FACTOR, "results": rows}, f, indent=1)
+    return rows
+
+
+def check(rows: list[dict]) -> list[str]:
+    fails = []
+    for r in rows:
+        name = r["name"]
+        if name.startswith("slo_cache"):
+            if not r["n_full_hits"]:
+                fails.append(f"{name}: the zipf trace produced zero full "
+                             "cache hits -- the cache never engaged")
+            elif r["speedup_p50"] < CACHE_SPEEDUP_MIN:
+                fails.append(
+                    f"{name}: cache-hit p50 speedup {r['speedup_p50']}x "
+                    f"below the {CACHE_SPEEDUP_MIN}x floor")
+        elif name.startswith("slo_writeback"):
+            if not r["identical_after_flush"]:
+                fails.append(f"{name}: flush-then-get diverged")
+            if r["ack_p50_writeback_s"] >= r["ack_p50_writethrough_s"]:
+                fails.append(
+                    f"{name}: write-back ack p50 "
+                    f"{r['ack_p50_writeback_s']}s is not below the "
+                    f"write-through {r['ack_p50_writethrough_s']}s -- "
+                    "the deferred upload is not deferred")
+            if r["chunks_drained"] != r["dirty_chunks_at_flush"]:
+                fails.append(f"{name}: flush drained {r['chunks_drained']} "
+                             f"of {r['dirty_chunks_at_flush']} dirty chunks")
+        elif name.startswith("slo_overload"):
+            on, off = r["admission_on"], r["admission_off"]
+            for arm in (on, off):
+                for klass in ("realtime", "archival"):
+                    total = (arm["done"][klass] + arm["rejected"][klass]
+                             + arm["failed_other"][klass])
+                    if total != arm["offered"][klass]:
+                        fails.append(
+                            f"{name}: {klass} accounting leak -- offered "
+                            f"{arm['offered'][klass]} != done+rejected+"
+                            f"failed {total}")
+            if r["rt_p99_over_baseline_on"] > SLO_FACTOR:
+                fails.append(
+                    f"{name}: realtime p99 under peak overload is "
+                    f"{r['rt_p99_over_baseline_on']}x its unloaded "
+                    f"baseline (budget {SLO_FACTOR}x) despite admission "
+                    "control")
+            if on["rejected"]["archival"] == 0 and \
+                    on["n_admission_shed"] == 0:
+                fails.append(f"{name}: peak rate shed/rejected no archival "
+                             "traffic -- the sweep never reached the knee")
+            if on["rejected"]["realtime"]:
+                fails.append(f"{name}: admission control rejected realtime "
+                             "traffic while archival was available to shed")
+            if r["rt_p99_over_baseline_off"] <= SLO_FACTOR:
+                fails.append(
+                    f"{name}: without admission control realtime p99 "
+                    f"stayed within {SLO_FACTOR}x "
+                    f"({r['rt_p99_over_baseline_off']}x) -- the control "
+                    "is not load-bearing at this scale")
+    return fails
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

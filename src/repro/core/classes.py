@@ -47,6 +47,7 @@ class StorageClass:
     dedup: str = "pool"  # "pool" | "global"
     pool: str = ""  # cluster-pool tag; empty -> a pool of its own (name)
     weight: float = 1.0  # share of the store's clusters for this pool
+    priority: int = 1  # scheduler lane: lower runs first, sheds last
 
     def __post_init__(self) -> None:
         if not self.name:
@@ -111,7 +112,7 @@ class StorageClass:
         """
         base = dict(name="realtime", n=10, k=5, chunk_min=1024,
                     chunk_avg=4096, chunk_max=8192, binding="ulb",
-                    dedup="pool")
+                    dedup="pool", priority=0)
         base.update(overrides)
         return cls(**base)
 
@@ -125,7 +126,7 @@ class StorageClass:
         """
         base = dict(name="archival", n=14, k=10, chunk_min=2048,
                     chunk_avg=8192, chunk_max=16384, binding="clb",
-                    dedup="pool")
+                    dedup="pool", priority=2)
         base.update(overrides)
         return cls(**base)
 

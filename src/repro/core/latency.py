@@ -146,6 +146,19 @@ class RepairBandwidth:
         return min(0.95, (nbytes / span) / self.link_bps)
 
 
+def cache_hit_time(nbytes: int, params: LatencyParams) -> float:
+    """Wall-clock time for a retrieval served from the block cache.
+
+    A hit skips every cluster connection (no per-node streams, no
+    order-statistic tail, no decode -- the cache holds decoded bytes):
+    the client pays the switching-node round trip plus streaming the
+    blob over its own NIC at full rate.  Partial hits compose: the
+    cached bytes ride this path while the misses pay
+    :func:`retrieval_time`; ``SEARSStore._assemble`` adds the two.
+    """
+    return params.meta_rtt + nbytes / params.client_bw
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterShare:
     """Bytes of one file stored on one cluster, with that cluster's load."""

@@ -85,6 +85,11 @@ class RetrievalPlan:
     ``request_id`` tags the plan with its owning scheduler request so a
     coalesced cross-user decode batch can be demuxed per request and a
     failure (e.g. data loss) isolated to the request it belongs to.
+
+    ``cached`` holds the chunks the switching node's block cache served
+    at plan time -- they never become fetch tasks, never touch a
+    cluster, and their bytes ride the fast ``cache_hit_time`` path of
+    the latency model instead of ``retrieval_time``.
     """
 
     user: str
@@ -93,6 +98,12 @@ class RetrievalPlan:
     fetch_tasks: list[FetchTask]
     share_bytes: dict[int, int]  # cluster -> decoded bytes (latency model)
     request_id: int = -1
+    cached: dict[bytes, bytes] = dataclasses.field(default_factory=dict)
+
+    @property
+    def cached_bytes(self) -> int:
+        """Bytes served from the block cache (no cluster involved)."""
+        return sum(len(b) for b in self.cached.values())
 
     @property
     def wire_bytes(self) -> int:

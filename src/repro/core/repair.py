@@ -224,6 +224,17 @@ class RepairManager:
         """Chunk copies currently queued for repair."""
         return len(self._pending)
 
+    def _is_dirty(self, chunk_id: bytes, cluster_id: int) -> bool:
+        """True for a write-back chunk copy whose pieces have not landed.
+
+        Dirty copies are invisible to every repair lane: their index
+        record deliberately has no pieces yet (the cache drain will land
+        them), so a census would misread them as total damage and
+        re-placement would destroy the only copy's metadata.
+        """
+        cache = getattr(self.store, "cache", None)
+        return cache is not None and cache.is_dirty(chunk_id, cluster_id)
+
     def hint(self, chunk_id: bytes, cluster_id: int) -> bool:
         """Read-repair hint: a degraded read touched this chunk copy.
 
@@ -239,6 +250,8 @@ class RepairManager:
         info = self.store.index.get(chunk_id, cluster_id)
         if info is None:
             return False  # deleted since the read was planned
+        if self._is_dirty(chunk_id, cluster_id):
+            return False  # pieces land at write-back drain, not here
         cluster = self.store.clusters[cluster_id]
         health = cluster.piece_census([chunk_id])[chunk_id]
         if health.whole and health.recoverable(cluster.k):
@@ -286,7 +299,9 @@ class RepairManager:
         if cluster_ids is None:
             cluster_ids = [c.cluster_id for c in self.store.clusters]
         for cluster_id in cluster_ids:
-            cids = sorted(self.store.index.cluster_chunks(cluster_id))
+            cids = [cid for cid
+                    in sorted(self.store.index.cluster_chunks(cluster_id))
+                    if not self._is_dirty(cid, cluster_id)]
             if not cids:
                 continue
             cluster = self.store.clusters[cluster_id]
@@ -429,6 +444,8 @@ class RepairManager:
                 swept += take
                 census = cluster.piece_census(window)
                 for cid in window:
+                    if self._is_dirty(cid, cluster_id):
+                        continue  # pieces pending at the write-back drain
                     health = census[cid]
                     if health.whole and health.recoverable(cluster.k):
                         self._pending.pop((cid, cluster_id), None)
@@ -492,6 +509,8 @@ class RepairManager:
             for it in its:
                 if store.index.get(it.chunk_id, cluster_id) is None:
                     continue  # deleted while queued: nothing to account
+                if self._is_dirty(it.chunk_id, cluster_id):
+                    continue  # write-back pending: drain owns the pieces
                 health = census[it.chunk_id]
                 if cluster.lost or not health.recoverable(cluster.k):
                     # the home alone cannot decode (covers a declared-lost

@@ -151,6 +151,17 @@ class Sanitizer:
                  getattr(b, "_next", 0))
         feed(sorted(st._logical.items()), sorted(st._nfiles.items()),
              sorted(st.repair._pending.keys()))
+        cache = getattr(st, "cache", None)
+        if cache is not None:
+            # resident set, LRU order and the write-back queue are all
+            # control-plane state: a begin seam that touches the cache
+            # would break pipelined/sequential equivalence exactly like
+            # an index mutation (cache reads in _plan_get happen outside
+            # the guarded begins, so legitimate traffic never trips this)
+            for key, data, dirty in cache.entries():
+                feed(key, len(data), dirty)
+            feed([(t.chunk_id, t.cluster_id, t.reserved)
+                  for t in cache.queued_tasks()])
         return h.hexdigest()
 
     def guard_begin(self, label: str, fn: Callable, *args, **kwargs):
@@ -174,15 +185,23 @@ class Sanitizer:
         self._budget.gear += gear
         self._budget.fused += fused
 
-    def add_put_budget(self, codes, chunks, engine) -> None:
+    def add_put_budget(self, codes, chunks, engine,
+                       staged_hash_only: bool = False) -> None:
         """Budget one put window's hash + encode launches.
 
         ``codes``/``chunks`` are the window's per-chunk code objects and
         chunk bytes (parallel lists, before dedup — dedup only shrinks
-        the real launch count).
+        the real launch count).  ``staged_hash_only`` is the write-back
+        commit: the window hashes but defers every encode (fused
+        included) to the background drain, whose GF budget accrues via
+        :meth:`add_writeback_budget` when the drain actually runs.
         """
         n = len(chunks)
         hash_batch = int(getattr(engine, "hash_batch", 512)) or 512
+        sha1 = -(-n // hash_batch) if n else 0
+        if staged_hash_only:
+            self.add_budget(sha1=sha1)
+            return
         buckets = {
             (code.n, code.k,
              -(-code.piece_len(len(blob)) // self._quantum))
@@ -190,8 +209,20 @@ class Sanitizer:
         if getattr(engine, "supports_fused_ingest", False):
             self.add_budget(fused=len(buckets))
         else:
-            self.add_budget(sha1=-(-n // hash_batch) if n else 0,
-                            gf=len(buckets))
+            self.add_budget(sha1=sha1, gf=len(buckets))
+
+    def add_writeback_budget(self, jobs) -> None:
+        """Budget one write-back drain's encode launches.
+
+        ``jobs`` is the drain's ``[(code, blob), ...]`` encode list: one
+        GF launch per ``(code, quantized piece length)`` bucket, the
+        same ceiling the foreground put model charges for its encodes.
+        """
+        buckets = {
+            (code.n, code.k,
+             -(-code.piece_len(len(blob)) // self._quantum))
+            for code, blob in jobs}
+        self.add_budget(gf=len(buckets))
 
     def add_repair_budget(self, n_jobs: int) -> None:
         """Budget one repair/re-placement sub-batch's recode launches.
@@ -259,8 +290,72 @@ class Sanitizer:
                             f"orphan piece: cluster {c.cluster_id} node "
                             f"{node.node_id} holds a piece of chunk "
                             f"{cid.hex()} with no live index record")
+        self._check_cache_ledger(recorded)
         self._check_shard_ledger(expected)
         self.checks += 1
+
+    def _check_cache_ledger(self, recorded) -> None:
+        """Block-cache conservation, checked at every window boundary.
+
+        Four invariants: (1) the dirty-byte ledger equals the queued
+        write-back tasks' bytes exactly (an upload lost without a
+        matching ``mark_clean``/``discard`` trips here); (2) the
+        cached-byte budget equals the resident blobs; (3) every cached
+        copy has a live index record -- a deleted chunk must leave the
+        cache atomically; (4) clean entries are byte-identical to what
+        decoding the cluster's own pieces yields, so a cache hit can
+        never serve different bytes than a cold read (the tentpole's
+        correctness claim, enforced at runtime; dirty entries have no
+        pieces yet and are skipped).  Per-cluster reservations must
+        also cover each dirty task's held bytes exactly -- at a window
+        boundary no foreground reservation is in flight, so the only
+        legitimate holders are queued write-backs.
+        """
+        st = self.store
+        cache = getattr(st, "cache", None)
+        if cache is None:
+            return
+        tasks = cache.queued_tasks()
+        queued_bytes = sum(len(t.data) for t in tasks)
+        if cache.stats.dirty_bytes != queued_bytes:
+            raise SanitizerError(
+                f"dirty-byte ledger out of conservation: stats say "
+                f"{cache.stats.dirty_bytes} but the write-back queue "
+                f"holds {queued_bytes}")
+        entries = cache.entries()
+        resident = sum(len(data) for _, data, _ in entries)
+        if cache.stats.cached_bytes != resident:
+            raise SanitizerError(
+                f"cached-byte ledger out of conservation: stats say "
+                f"{cache.stats.cached_bytes} but entries hold {resident}")
+        checked = 0
+        for (cid, cl), data, dirty in entries:
+            if (cid, cl) not in recorded:
+                raise SanitizerError(
+                    f"cache entry for chunk {cid.hex()} on cluster {cl} "
+                    "has no live index record; deletes must evict "
+                    "atomically")
+            if dirty or checked >= 64:  # bound the per-window decode cost
+                continue
+            checked += 1
+            cluster = st.clusters[cl]
+            pieces = cluster.read_pieces(cid, cluster.k)
+            if len(pieces) >= cluster.k and (
+                    cluster.code.decode_bytes(pieces, len(data)) != data):
+                raise SanitizerError(
+                    f"cache poisoned: clean entry for chunk {cid.hex()} "
+                    f"on cluster {cl} differs from the cluster's own "
+                    "decoded pieces")
+        held: dict[int, int] = {}
+        for t in tasks:
+            held[t.cluster_id] = held.get(t.cluster_id, 0) + t.reserved
+        for c in st.clusters:
+            want = held.get(c.cluster_id, 0)
+            if c._reserved != want:
+                raise SanitizerError(
+                    f"write-back reservation ledger: cluster "
+                    f"{c.cluster_id} reserves {c._reserved} bytes but "
+                    f"its queued write-backs hold {want}")
 
     def _check_shard_ledger(self, expected) -> None:
         """Per-shard conservation: every record/table on its bucket owner.

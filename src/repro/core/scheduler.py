@@ -51,6 +51,15 @@ GET = "get"
 DELETE = "delete"
 
 
+class AdmissionError(RuntimeError):
+    """A request was shed or rejected by scheduler admission control.
+
+    Raised *through the future* (``result()`` re-raises it), never out
+    of ``submit_*`` -- the caller always gets a handle and an honest
+    answer, not a silent drop.
+    """
+
+
 def _put_payload_bytes(files) -> int:
     """Queued put bytes for auto-flush accounting; never raises.
 
@@ -220,6 +229,10 @@ class RequestQueue:
         self._next_id += 1
         return self._submit(req)
 
+    def remove(self, req: Request) -> None:
+        """Withdraw a still-queued request (admission-control shedding)."""
+        self._pending.remove(req)
+
     def drain(self) -> list[Request]:
         pending, self._pending = self._pending, []
         return pending
@@ -261,6 +274,14 @@ class SchedulerStats:
     n_scrub_sweeps: int = 0
     scrub_chunks_censused: int = 0
     scrub_enqueued: int = 0  # chunk copies the sweeps newly queued
+    # background write-back lane (bounded drain of the block cache's
+    # upload queue after each flush's foreground windows commit)
+    n_writeback_windows: int = 0  # flushes that drained write-back chunks
+    writeback_chunks: int = 0  # chunks the lane landed on clusters
+    writeback_seconds: float = 0.0
+    # per-class admission control (lanes=True + queue limits)
+    n_admission_shed: int = 0  # queued lower-priority requests withdrawn
+    n_admission_rejected: int = 0  # incoming requests refused outright
 
     @property
     def data_plane_launches(self) -> int:
@@ -324,7 +345,11 @@ class BatchScheduler:
                  repair_chunks_per_flush: int | None = None,
                  scrub_interval: float | None = None,
                  scrub_budget=None,
-                 pipeline: bool = True) -> None:
+                 pipeline: bool = True,
+                 lanes: bool = False,
+                 max_pending: int | None = None,
+                 max_queue_bytes: int | None = None,
+                 writeback_bytes_per_flush: int | None = None) -> None:
         self.store = store
         self.queue = queue or RequestQueue()
         self.stats = SchedulerStats()
@@ -337,6 +362,24 @@ class BatchScheduler:
         self.scrub_interval = scrub_interval
         self.scrub_budget = scrub_budget  # int | {class: int} | None
         self._last_scrub = clock()
+        # per-class priority lanes: with lanes=True each flush reorders
+        # its drained queue by (storage-class priority, request_id)
+        # before windowing -- realtime traffic preempts archival inside
+        # the flush.  This deliberately trades the scheduler's default
+        # cross-class submission-order guarantee for latency (ordering
+        # *within* a class is still submission order; leave lanes off if
+        # cross-class read-your-writes matters).
+        self.lanes = lanes
+        # admission control: when the queue exceeds these limits at
+        # submit, strictly-lower-priority queued requests are shed
+        # (newest first) to make room; if none can be shed the incoming
+        # request itself is rejected.  Both resolve through the future
+        # as AdmissionError -- honest rejection, not silent drops.
+        self.max_pending = max_pending
+        self.max_queue_bytes = max_queue_bytes
+        # write-back lane: bytes of dirty chunk data drained from the
+        # store's block cache per flush window (None = drain fully)
+        self.writeback_bytes_per_flush = writeback_bytes_per_flush
         # double-buffer put windows within a flush: issue window i+1's
         # device chunking pass before window i's host phases run.  The
         # begin phase touches no store state, so results stay
@@ -353,7 +396,7 @@ class BatchScheduler:
         future = RequestFuture(req, self)
         # count from the queue's materialized copy -- the caller's `files`
         # may be a generator the queue already exhausted
-        self._note_submit(_put_payload_bytes(req.files))
+        self._note_submit(_put_payload_bytes(req.files), req)
         return future
 
     def submit_get(self, user: str, filenames: list[str],
@@ -365,7 +408,7 @@ class BatchScheduler:
                                     rho_fn=rho_fn,
                                     storage_class=storage_class)
         future = RequestFuture(req, self)
-        self._note_submit(0)
+        self._note_submit(0, req)
         return future
 
     def submit_delete(self, user: str,
@@ -379,16 +422,86 @@ class BatchScheduler:
         """
         req = self.queue.submit_delete(user, filenames)
         future = RequestFuture(req, self)
-        self._note_submit(0)
+        self._note_submit(0, req)
         return future
 
-    def _note_submit(self, nbytes: int) -> None:
+    def _note_submit(self, nbytes: int, req: Request | None = None) -> None:
         if self._window_opened is None:
             self._window_opened = self._clock()
         self._pending_bytes += nbytes
+        if req is not None and not self._admit(req, nbytes):
+            return  # rejected: a dead request must not trigger a flush
         if self._should_auto_flush():
             self.stats.n_auto_flushes += 1
             self.flush()
+
+    # -------------------------------------------------- admission control --
+    def _priority(self, req: Request) -> int:
+        """Lane priority of a request's storage class (lower runs first).
+
+        DELETEs (and unknown class names, which fail at flush anyway)
+        ride the store default class's lane.
+        """
+        try:
+            cls = self.store._class(req.storage_class)
+        except Exception:
+            cls = self.store.default_class
+        return getattr(cls, "priority", 1)
+
+    def _over_limits(self) -> bool:
+        if self.max_pending is not None and \
+                len(self.queue) > self.max_pending:
+            return True
+        return (self.max_queue_bytes is not None
+                and self._pending_bytes > self.max_queue_bytes)
+
+    def _admit(self, req: Request, nbytes: int) -> bool:
+        """Shed/reject under backpressure; True if ``req`` stays queued.
+
+        While the queue is over ``max_pending``/``max_queue_bytes``,
+        queued requests of *strictly lower* priority than the incoming
+        one are withdrawn (lowest-importance, newest first) and failed
+        with :class:`AdmissionError`; if the queue is still over after
+        no more victims exist, the incoming request itself is rejected.
+        Equal-priority traffic is never preempted -- overload inside one
+        class rejects the newcomer, preserving FIFO fairness.
+        """
+        if self.max_pending is None and self.max_queue_bytes is None:
+            return True
+        prio = self._priority(req)
+        while self._over_limits():
+            victim = None
+            for cand in self.queue._pending:
+                if cand is req:
+                    continue
+                cp = self._priority(cand)
+                if cp <= prio:
+                    continue
+                if victim is None or (cp, cand.request_id) > \
+                        (self._priority(victim), victim.request_id):
+                    victim = cand
+            if victim is None:
+                break
+            self.queue.remove(victim)
+            if victim.kind == PUT and victim.files:
+                self._pending_bytes -= _put_payload_bytes(victim.files)
+            victim.status = "failed"
+            victim.error = AdmissionError(
+                f"request {victim.request_id} ({victim.kind}, class="
+                f"{victim.storage_class or 'default'}) shed by higher-"
+                "priority traffic under queue backpressure")
+            self.stats.n_admission_shed += 1
+        if not self._over_limits():
+            return True
+        self.queue.remove(req)
+        self._pending_bytes -= nbytes
+        req.status = "failed"
+        req.error = AdmissionError(
+            f"request {req.request_id} ({req.kind}, class="
+            f"{req.storage_class or 'default'}) rejected: scheduler "
+            "queue is over its admission limits")
+        self.stats.n_admission_rejected += 1
+        return False
 
     def _should_auto_flush(self) -> bool:
         if self.flush_bytes is not None and \
@@ -413,6 +526,7 @@ class BatchScheduler:
             return self.flush()
         if self._scrub_window():
             self._repair_window()
+        self._writeback_window()
         return []
 
     @property
@@ -439,10 +553,18 @@ class BatchScheduler:
         self._window_opened = None
         if not requests:
             self._scrub_window()  # idle flush still advances the
-            self._repair_window()  # background scrub + repair lanes
+            self._repair_window()  # background scrub/repair/write-back
+            self._writeback_window()
             return []
         before = LAUNCHES.snapshot()
         t0 = time.perf_counter()
+        if self.lanes:
+            # priority lanes: realtime preempts archival inside this
+            # flush (stable sort -- within a class, submission order
+            # holds; across classes it deliberately does not)
+            requests = sorted(requests,
+                              key=lambda r: (self._priority(r),
+                                             r.request_id))
         windows = self._windows(requests)
         # pipelined put ingest: PutWindowState for put windows whose
         # chunk pass was issued ahead of their execution slot.  Beginning
@@ -501,6 +623,7 @@ class BatchScheduler:
         self.stats.flush_seconds += time.perf_counter() - t0
         self._scrub_window()
         self._repair_window()
+        self._writeback_window()
         return requests
 
     def _scrub_window(self) -> bool:
@@ -546,6 +669,28 @@ class BatchScheduler:
         self.stats.repair_deferred += report.deferred
         self.stats.repair_gf_launches += LAUNCHES.delta(before).gf
         self.stats.repair_seconds += time.perf_counter() - t0
+
+    def _writeback_window(self) -> None:
+        """Background lane: drain the block cache's upload queue.
+
+        Runs after the foreground windows (and the repair lane) of every
+        flush and every ``poll()``, landing up to
+        ``writeback_bytes_per_flush`` bytes of dirty chunks on their
+        clusters (``None`` drains fully).  The put that queued each
+        chunk already acknowledged at cache-commit time -- this lane is
+        where the deferred encode+store cost is actually paid, outside
+        any request's latency.
+        """
+        cache = getattr(self.store, "cache", None)
+        if cache is None or not cache.dirty_count:
+            return
+        t0 = time.perf_counter()
+        n = self.store.drain_writeback(
+            max_bytes=self.writeback_bytes_per_flush)
+        if n:
+            self.stats.n_writeback_windows += 1
+            self.stats.writeback_chunks += n
+        self.stats.writeback_seconds += time.perf_counter() - t0
 
     @staticmethod
     def _windows(requests: list[Request]) -> list[list[Request]]:

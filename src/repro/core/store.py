@@ -72,11 +72,14 @@ import numpy as np
 
 from repro.core import chunking, dedup, hashing
 from repro.core.binding import make_binding
+from repro.core.cache import (BlockCache, CacheConfig, CacheStats,
+                              WritebackTask)
 from repro.core.chunking import DEFAULT_CHUNKER, Chunker
 from repro.core.classes import StorageClass, partition_pools
 from repro.core.cluster import Cluster, SwitchingNode
 from repro.core.engine import CodingEngine, make_engine
-from repro.core.latency import ClusterShare, LatencyParams, retrieval_time
+from repro.core.latency import (ClusterShare, LatencyParams, cache_hit_time,
+                                retrieval_time)
 from repro.core.pipeline import (EncodeTask, FetchTask, RetrievalPlan,
                                  UploadPlan)
 from repro.core.repair import RepairManager, RepairReport
@@ -105,6 +108,7 @@ class RetrievalStats:
     n_fetched: int  # unique chunks actually downloaded
     bytes_fetched: int  # wire bytes: k pieces per fetched chunk
     clusters_touched: int
+    n_cache_hits: int = 0  # unique chunks served by the block cache
 
 
 @dataclasses.dataclass
@@ -147,6 +151,7 @@ class StoreStats:
     n_unique_chunks: int
     n_files: int
     per_class: dict[str, ClassStats] = dataclasses.field(default_factory=dict)
+    cache: CacheStats | None = None  # block-cache counters, if enabled
 
     @property
     def consumed_bytes(self) -> int:
@@ -189,7 +194,8 @@ class SEARSStore:
                  classes: list[StorageClass] | None = None,
                  sanitize: bool | None = None,
                  repair_bandwidth=None,
-                 shards: int | None = None) -> None:
+                 shards: int | None = None,
+                 cache: CacheConfig | bool | None = None) -> None:
         legacy = [kw for kw, v in (("n", n), ("k", k),
                                    ("binding", binding),
                                    ("chunker", chunker))
@@ -255,6 +261,19 @@ class SEARSStore:
                                     bandwidth=repair_bandwidth)
         self._logical = {c.name: 0 for c in class_list}
         self._nfiles = {c.name: 0 for c in class_list}
+        # hot-data block cache at the switching node (repro.core.cache);
+        # default off, opt in per store or suite-wide via SEARS_CACHE=1
+        # (the env default enables a write-back cache so both the read
+        # and the write path get exercised by sanitized suite runs)
+        if cache is None:
+            if os.environ.get("SEARS_CACHE", "") not in ("", "0"):
+                cache = CacheConfig(write_back=True)
+            else:
+                cache = False
+        if cache is True:
+            cache = CacheConfig()
+        self.cache: BlockCache | None = (BlockCache(cache) if cache
+                                         else None)
         # runtime sanitizer (begin purity, expected-launch model, piece
         # ledger); default off, opt in per store or via SEARS_SANITIZE=1
         if sanitize is None:
@@ -286,6 +305,11 @@ class SEARSStore:
         if scope is None and cls.dedup != "global":
             scope = self.pools[cls.pool_tag]
         return scope
+
+    @property
+    def _write_back(self) -> bool:
+        """True when puts acknowledge at cache commit (async upload)."""
+        return self.cache is not None and self.cache.config.write_back
 
     # -- legacy single-config views (the default class's policy) ----------
     @property
@@ -340,7 +364,20 @@ class SEARSStore:
         Its buckets — with their chunk records, switching tables and
         binding entries — migrate to the surviving shards; the drained
         id is retired forever (a later ``add_shard`` gets a fresh id and
-        starts empty, so stale state can never be re-admitted)."""
+        starts empty, so stale state can never be re-admitted).
+
+        With a block cache installed the drain is a coherence barrier:
+        the write-back queue drains fully first (no dirty chunk may
+        outlive the shard that owns its metadata bucket), then every
+        cached chunk whose bucket lived on the drained shard is evicted
+        -- conservative invalidation, so a re-read after the migration
+        re-fills from the (unchanged) clusters."""
+        if self.cache is not None:
+            self.flush()
+            doomed = [key for key in self.cache.keys()
+                      if (self.shard_map.shard_of_chunk(key[0]).shard_id
+                          == shard_id)]
+            self.cache.evict_clean(doomed)
         self.shard_map.drain_shard(shard_id)
 
     def shard_of_user(self, user: str) -> int:
@@ -601,7 +638,12 @@ class SEARSStore:
         # deterministic, so the grouping changes launch counts, never
         # bytes.
         precomputed: dict[tuple[int, int, bytes], list[bytes]] | None = None
-        fused = getattr(self.engine, "supports_fused_ingest", False)
+        # under write-back the ack must not pay the encode: stage hashing
+        # here and defer the GF work to the background drain, even on a
+        # fused engine (its speculative hash+encode mega-kernel would
+        # move the encode back into the foreground put)
+        fused = (getattr(self.engine, "supports_fused_ingest", False)
+                 and not self._write_back)
         if fused:
             precomputed = {}
         ids_of: dict[int, list[bytes]] = {}  # request index -> flat ids
@@ -616,9 +658,11 @@ class SEARSStore:
                 if self._sanitizer is not None:
                     # hash + encode budget per shard sub-window, from the
                     # pre-dedup chunk list (dedup only shrinks the real
-                    # launch count below the model)
-                    self._sanitizer.add_put_budget(g_codes, g_chunks,
-                                                   self.engine)
+                    # launch count below the model); a write-back commit
+                    # hashes only -- its GF budget accrues at drain time
+                    self._sanitizer.add_put_budget(
+                        g_codes, g_chunks, self.engine,
+                        staged_hash_only=self._write_back)
                 if fused:
                     g_ids, g_pieces = self.engine.hash_encode_blobs_multi(
                         list(zip(g_codes, g_chunks)))
@@ -684,8 +728,11 @@ class SEARSStore:
                        if requests[i].error is None
                        for p in plans_by_req[requests[i].request_id]]
             try:
-                fc, we = self._execute_uploads(g_plans,
-                                               precomputed=precomputed)
+                if self._write_back:
+                    fc, we = self._commit_writeback(g_plans)
+                else:
+                    fc, we = self._execute_uploads(g_plans,
+                                                   precomputed=precomputed)
             except Exception as exc:
                 # encode-batch failure: this group's reservations are
                 # already released; release the not-yet-executed groups'
@@ -730,6 +777,15 @@ class SEARSStore:
 
         if self._sanitizer is not None:
             self._sanitizer.check_window("put window")
+
+        # bounded dirty bytes: a commit that blew the budget pays for a
+        # partial synchronous drain before its window returns, so the
+        # pinned (unevictable) share of the cache stays bounded no
+        # matter how bursty the put traffic is
+        if self._write_back:
+            while self.cache.over_dirty_limit():
+                if self.drain_writeback() == 0:
+                    break
 
     def _rollback_files(self, user: str, plans: list[UploadPlan]) -> None:
         """Drop the metadata of planned files after a failure.
@@ -891,6 +947,128 @@ class SEARSStore:
                 error = error or exc
         return failed, error
 
+    # ------------------------------------------------------- write-back ---
+    def _commit_writeback(self, plans: list[UploadPlan]
+                          ) -> tuple[set[tuple[bytes, int]], Exception | None]:
+        """Write-back twin of ``_execute_uploads``: cache-commit the new
+        chunks and queue their uploads instead of encoding now.
+
+        The put acknowledges here -- metadata (index record, file meta,
+        cluster reservation) is already durable from the plan phase, the
+        bytes are pinned dirty in the cache, and the reservation is
+        *kept* until the background drain lands the pieces, so binding
+        decisions see the same free-space trajectory as write-through.
+        Nothing can fail: no encode, no node writes.
+        """
+        tasks = [t for p in plans for t in p.encode_tasks]
+        for t in tasks:
+            # a later file in the window may have overwritten/deleted an
+            # earlier one's chunk before it ever reached the cache; the
+            # delete found no entry to discard, so the plan's reservation
+            # is still held and must be released here (the write-through
+            # twin does the same for its dead tasks)
+            if self.index.get(t.chunk_id, t.cluster_id) is None:
+                self.clusters[t.cluster_id].release_reservation(
+                    self.clusters[t.cluster_id].n * t.piece_len)
+                continue
+            self.cache.put_dirty(
+                t.chunk_id, t.cluster_id, t.data, t.piece_len,
+                reserved=self.clusters[t.cluster_id].n * t.piece_len)
+        return set(), None
+
+    def drain_writeback(self, max_bytes: int | None = None) -> int:
+        """Upload queued write-back chunks (one background flush window).
+
+        Takes the oldest ``max_bytes`` of dirty chunks (at least one),
+        encodes them in one bucketed engine batch and lands the pieces
+        per cluster with the bulk store API -- the same launch economics
+        as a foreground put window, just off the ack path.  A cluster
+        whose writes fail gets its tasks requeued (front of the queue,
+        order kept) with the reservation re-taken, so the next drain or
+        ``flush()`` retries; piece writes are idempotent for identical
+        bytes, so a partially-landed retry is safe.  Returns the number
+        of chunks that became clean.
+        """
+        if self.cache is None:
+            return 0
+        tasks = self.cache.take_writeback(max_bytes)
+        if not tasks:
+            return 0
+        if self._sanitizer is None:
+            return self._drain_writeback_impl(tasks)
+        with self._sanitizer.tracking():
+            return self._drain_writeback_impl(tasks)
+
+    def _drain_writeback_impl(self, tasks: list[WritebackTask]) -> int:
+        live: list[WritebackTask] = []
+        for t in tasks:
+            if self.index.get(t.chunk_id, t.cluster_id) is None:
+                # belt and braces: deletes cancel queued uploads via
+                # BlockCache.discard, so a dead task here means only
+                # that its reservation must not leak
+                self.clusters[t.cluster_id].release_reservation(t.reserved)
+                continue
+            live.append(t)
+        jobs = [(self.clusters[t.cluster_id].code, t.data) for t in live]
+        if self._sanitizer is not None:
+            self._sanitizer.add_writeback_budget(jobs)
+        try:
+            encoded = self.engine.encode_blobs_multi(jobs)
+        except Exception:
+            self.cache.requeue(live)
+            raise
+        by_cluster: dict[int, list[tuple[WritebackTask, list[bytes]]]] = {}
+        for t, pieces in zip(live, encoded):
+            by_cluster.setdefault(t.cluster_id, []).append((t, pieces))
+        drained = 0
+        failed: list[WritebackTask] = []
+        for cluster_id, group in by_cluster.items():
+            cluster = self.clusters[cluster_id]
+            try:
+                cluster.store_chunks(
+                    [(t.chunk_id, pieces) for t, pieces in group],
+                    min_pieces=cluster.k,
+                    reserved=sum(t.reserved for t, _ in group))
+            except Exception:
+                # store_chunks released the reservation; the chunks are
+                # still dirty, so re-reserve and push the group back
+                for t, _ in group:
+                    cluster.reserve(t.reserved)
+                failed.extend(t for t, _ in group)
+                continue
+            for t, _ in group:
+                self.cache.mark_clean(t)
+                self.cache.note_drained(cluster_id, len(t.data))
+                drained += 1
+        if failed:
+            order = {id(t): i for i, t in enumerate(live)}
+            failed.sort(key=lambda t: order[id(t)])  # keep FIFO order
+            self.cache.requeue(failed)
+        if self._sanitizer is not None:
+            self._sanitizer.check_window("writeback drain")
+        return drained
+
+    def flush(self) -> int:
+        """Durability barrier: drain the write-back queue to empty.
+
+        Called directly, by ``BatchScheduler`` teardown paths, and by
+        the shard-drain / cluster-loss lifecycle hooks.  Raises if a
+        drain pass makes no progress (every cluster refusing writes), so
+        a caller can never believe an undrainable store is clean.
+        """
+        if self.cache is None:
+            return 0
+        total = 0
+        while self.cache.dirty_count:
+            n = self.drain_writeback()
+            if n == 0:
+                raise RuntimeError(
+                    f"write-back flush stalled with "
+                    f"{self.cache.dirty_count} dirty chunk(s): no target "
+                    "cluster is accepting writes")
+            total += n
+        return total
+
     # --------------------------------------------------------- download ---
     def get_file(self, user: str, filename: str,
                  local_chunk_ids: set[bytes] | None = None,
@@ -975,9 +1153,8 @@ class SEARSStore:
         for t in tasks:
             by_cluster.setdefault(t.cluster_id, []).append(t)
         for cluster_id, ctasks in by_cluster.items():
-            got = self.clusters[cluster_id].read_pieces_batch(
-                [t.chunk_id for t in ctasks],
-                self.clusters[cluster_id].k)
+            got = self._read_cluster_pieces(cluster_id,
+                                            [t.chunk_id for t in ctasks])
             for t in ctasks:
                 t.pieces = got[t.chunk_id]
         for t in tasks:
@@ -1014,6 +1191,9 @@ class SEARSStore:
         plans, keys, token = state
         blobs = self.engine.decode_blobs_multi_finish(token)
         blob_by_key = dict(zip(keys, blobs))
+        if self.cache is not None:
+            for (cid, cl), blob in blob_by_key.items():
+                self.cache.fill(cid, cl, blob)
         out = [self._assemble(
             plan,
             {t.chunk_id: blob_by_key[(t.chunk_id, t.cluster_id)]
@@ -1069,9 +1249,8 @@ class SEARSStore:
                             by_cluster.setdefault(t.cluster_id,
                                                   []).append(t)
                 for cluster_id, tasks in by_cluster.items():
-                    got = self.clusters[cluster_id].read_pieces_batch(
-                        [t.chunk_id for t in tasks],
-                        self.clusters[cluster_id].k)
+                    got = self._read_cluster_pieces(
+                        cluster_id, [t.chunk_id for t in tasks])
                     for t in tasks:
                         t.pieces = got[t.chunk_id]
         except Exception as exc:
@@ -1136,6 +1315,12 @@ class SEARSStore:
                 req.status, req.error = "failed", exc
             return
 
+        # read-fill: every decoded chunk becomes a clean cache entry (in
+        # deterministic plan order), so the next window's repeats hit
+        if self.cache is not None:
+            for (cid, cl), blob in blob_by_key.items():
+                self.cache.fill(cid, cl, blob)
+
         # assemble + stats per file, fanned back out per request (a bad
         # per-request rho_fn fails only its own request)
         for req in live:
@@ -1153,6 +1338,19 @@ class SEARSStore:
 
         if self._sanitizer is not None:
             self._sanitizer.check_launches("get window")
+
+    def _read_cluster_pieces(self, cluster_id: int, chunk_ids: list[bytes]
+                             ) -> dict[bytes, dict[int, bytes]]:
+        """The sanctioned bulk piece-read path for cache *misses*.
+
+        Every hot-path cluster read funnels through here so the block
+        cache's accounting stays honest: hits were peeled off in
+        ``_plan_get``, so by construction each byte read here was a
+        cache miss.  searslint's cache-discipline pass flags any other
+        ``read_pieces*`` call in store/scheduler hot paths.
+        """
+        cluster = self.clusters[cluster_id]
+        return cluster.read_pieces_batch(chunk_ids, cluster.k)
 
     def _plan_get(self, user: str, filename: str,
                   local_chunk_ids: set[bytes] | None,
@@ -1174,6 +1372,7 @@ class SEARSStore:
 
         tasks: list[FetchTask] = []
         share_bytes: dict[int, int] = {}
+        cached: dict[bytes, bytes] = {}
         seen: set[bytes] = set()
         for cid, cluster_id in meta.entries:
             if cid in local or cid in seen:
@@ -1182,6 +1381,15 @@ class SEARSStore:
             info = self.index.get(cid, cluster_id)
             if info is None:
                 raise KeyError(f"chunk {cid.hex()} lost from index")
+            if self.cache is not None:
+                blob = self.cache.lookup(cid, cluster_id)
+                if blob is not None:
+                    # hit: never becomes a fetch task, never touches the
+                    # cluster.  A dirty copy (write-back not yet drained)
+                    # always lands here -- it is pinned in the cache and
+                    # its pieces do not exist anywhere else yet.
+                    cached[cid] = blob
+                    continue
             tasks.append(FetchTask(
                 chunk_id=cid, cluster_id=cluster_id, length=info.length,
                 piece_len=self.clusters[cluster_id].code.piece_len(
@@ -1190,7 +1398,7 @@ class SEARSStore:
                                        + info.length)
         return RetrievalPlan(user=user, filename=filename, meta=meta,
                              fetch_tasks=tasks, share_bytes=share_bytes,
-                             request_id=request_id)
+                             request_id=request_id, cached=cached)
 
     def _assemble(self, plan: RetrievalPlan, decoded: dict[bytes, bytes],
                   rho_fn) -> tuple[bytes, RetrievalStats]:
@@ -1198,6 +1406,8 @@ class SEARSStore:
         out = bytearray()
         for (cid, cluster_id), ln in zip(meta.entries, meta.lengths):
             blob = decoded.get(cid)
+            if blob is None:
+                blob = plan.cached.get(cid)
             if blob is None:
                 blob = self._read_local_placeholder(cid, cluster_id, ln)
             out += blob[:ln]
@@ -1207,16 +1417,29 @@ class SEARSStore:
         # a RepairBandwidth installed, its per-cluster utilisation floors
         # the rho each retrieval connection sees (max with any caller-
         # provided rho_fn).  Without one, behavior is unchanged (rho 0).
+        # Background write-back drains congest their target clusters the
+        # same way (the cache's own bandwidth meter).
+        wb_rho = (self.cache.cluster_rho if self.cache is not None
+                  else self.repair.cluster_rho)
         shares = [ClusterShare(cl, nb,
                                rho=max(rho_fn(cl) if rho_fn else 0.0,
-                                       self.repair.cluster_rho(cl)))
+                                       self.repair.cluster_rho(cl),
+                                       wb_rho(cl)))
                   for cl, nb in plan.share_bytes.items()]
         t = retrieval_time(shares, cls.n, cls.k, self.latency, self.rng)
+        if plan.cached:
+            # cached bytes bypass the retrieval model: they stream from
+            # the switching node at client NIC rate.  retrieval_time([])
+            # is the same meta_rtt that cache_hit_time charges, so a
+            # full hit costs exactly cache_hit_time(cached_bytes).
+            t += (cache_hit_time(plan.cached_bytes, self.latency)
+                  - self.latency.meta_rtt)
         stats = RetrievalStats(filename=plan.filename, file_bytes=meta.size,
                                time_s=t, n_chunks=len(meta.entries),
                                n_fetched=len(plan.fetch_tasks),
                                bytes_fetched=plan.wire_bytes,
-                               clusters_touched=len(plan.share_bytes))
+                               clusters_touched=len(plan.share_bytes),
+                               n_cache_hits=len(plan.cached))
         return bytes(out), stats
 
     def _read_local_placeholder(self, cid: bytes, cluster_id: int,
@@ -1225,9 +1448,15 @@ class SEARSStore:
 
         The simulator does not persist device caches, so rebuild the chunk
         from SEARS with the owning cluster's code (time is *not* charged
-        -- it was a cache hit)."""
+        -- it was a cache hit).  The block cache is peeked first: a
+        dirty write-back chunk has no pieces on any cluster yet, so the
+        cache copy is the only source of its bytes."""
+        if self.cache is not None:
+            blob = self.cache.peek(cid, cluster_id)
+            if blob is not None:
+                return blob
         cluster = self.clusters[cluster_id]
-        pieces = cluster.read_pieces(cid, cluster.k)
+        pieces = cluster.read_pieces(cid, cluster.k)  # searslint: ignore[cache-bypass] -- device local-cache rebuild; cache peeked above, no time charged
         return cluster.code.decode_bytes(pieces, length)
 
     # ------------------------------------------------------------ delete ---
@@ -1280,6 +1509,17 @@ class SEARSStore:
                 continue
             seen.add((cid, cluster_id))
             if self.index.release(cid, cluster_id):
+                # last reference gone: cancel any queued write-back of
+                # this copy atomically with dropping its pieces, and
+                # hand back the cluster capacity the plan reserved.  The
+                # delete_chunk still runs (idempotent) because a partial
+                # drain failure may have landed pieces while the task
+                # stayed queued.
+                if self.cache is not None:
+                    task = self.cache.discard(cid, cluster_id)
+                    if task is not None:
+                        self.clusters[cluster_id].release_reservation(
+                            task.reserved)
                 self.clusters[cluster_id].delete_chunk(cid)
 
     # ------------------------------------------------- disaster recovery --
@@ -1308,6 +1548,8 @@ class SEARSStore:
                 f"cluster {cluster_id} is pool {tag!r}'s last cluster; "
                 "admit_cluster() replacement capacity before declaring "
                 "the loss")
+        if self.cache is not None and not cluster.lost:
+            self._rehome_dirty(cluster_id, remaining)
         cluster.declare_lost()
         self.pools[tag] = remaining
         for binding in self._bindings.values():
@@ -1317,6 +1559,69 @@ class SEARSStore:
                                    if c == cluster_id):
                     del bound[user]
         return self.repair.note_cluster_lost(cluster_id)
+
+    def _rehome_dirty(self, cluster_id: int,
+                      remaining: tuple[int, ...]) -> None:
+        """Cluster loss with a dirty cache: re-plan the queued uploads.
+
+        A dirty chunk's only bytes live in the cache -- the dying
+        cluster never stored its pieces, so repair has no donors and
+        re-placement would be data loss.  Instead every queued upload
+        planned onto the lost cluster re-homes to a surviving cluster
+        of the same pool: metadata (file entries, index record,
+        reservation) moves, the task keeps its queue position, and the
+        eventual drain lands the pieces on the new home.  Two-phase:
+        targets are chosen for *all* tasks before anything mutates, so
+        an un-re-homable loss is refused with the store intact.
+        """
+        doomed = [t for t in self.cache.queued_tasks()
+                  if t.cluster_id == cluster_id]
+        if not doomed:
+            return
+        extra: dict[int, int] = {}  # capacity already promised, per target
+        targets: list[int] = []
+        for task in doomed:
+            target = None
+            for cand_id in remaining:
+                cand = self.clusters[cand_id]
+                if (not cand.lost
+                        and cand.viable(task.reserved
+                                        + extra.get(cand_id, 0))):
+                    target = cand_id
+                    break
+            if target is None:
+                raise RuntimeError(
+                    f"cluster {cluster_id} has {len(doomed)} queued "
+                    "write-back chunk(s) and no surviving pool cluster "
+                    "can take them; flush() before the loss or "
+                    "admit_cluster() replacement capacity first")
+            extra[target] = extra.get(target, 0) + task.reserved
+            targets.append(target)
+        for task, new_id in zip(doomed, targets):
+            cid, old_id = task.chunk_id, task.cluster_id
+            refs = self.index.get(cid, old_id).refcount
+            merge = self.index.get(cid, new_id) is not None
+            # rewrite live file chunk-meta-data in place (FileMeta
+            # identity preserved), same recipe as repair._commit_moves
+            for user in sorted(self.switching):
+                table = self.switching[user].table
+                for fname in sorted(table):
+                    entries = table[fname].entries
+                    for pos, entry in enumerate(entries):
+                        if entry == (cid, old_id):
+                            entries[pos] = (cid, new_id)
+            if not merge:
+                self.index.add(cid, new_id, len(task.data))
+            self.index.add_ref(cid, new_id, count=refs)
+            self.index.release(cid, old_id, count=refs)
+            self.clusters[old_id].release_reservation(task.reserved)
+            if merge:
+                # the target already holds live pieces of this exact
+                # content -- the queued upload is now redundant
+                self.cache.drop_task(task)
+            else:
+                self.clusters[new_id].reserve(task.reserved)
+                self.cache.rehome_dirty(task, new_id)
 
     def admit_cluster(self, storage_class: str | None = None,
                       node_capacity: int | None = None) -> Cluster:
@@ -1391,4 +1696,6 @@ class SEARSStore:
                           index_bytes=index_bytes,
                           n_unique_chunks=len(self.index),
                           n_files=self.n_files,
-                          per_class=per_class)
+                          per_class=per_class,
+                          cache=(dataclasses.replace(self.cache.stats)
+                                 if self.cache is not None else None))

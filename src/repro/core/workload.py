@@ -632,6 +632,67 @@ def apply_storm(store, events: list[StormEvent]) -> list:
     return reports
 
 
+@dataclasses.dataclass(frozen=True)
+class SLOTraceConfig:
+    """Closed-loop zipf trace for the block-cache / SLO benchmark.
+
+    Models a million-user switching node front end: user identities are
+    drawn zipf-ranked from an ``n_users``-sized id space (a handful of
+    heavy hitters dominate, the long tail appears once), and every
+    operation touches one file of a small shared **hot catalog** whose
+    contents are identical across users -- the canonical
+    popular-object workload (software updates, viral media).  Under a
+    pool-scoped-dedup CLB class each catalog file's chunks are stored
+    exactly once system-wide, so repeated access from *different* users
+    converges on the same chunk copies: precisely the traffic a
+    switching-node block cache exists to absorb.
+
+    The trace is closed-loop: the first time a (user, file) pair
+    appears it is a put, every later appearance is a get -- each user
+    must upload before it can fetch, and the hot files accumulate gets.
+    """
+
+    n_users: int = 1_000_000  # zipf-ranked user-id space
+    n_ops: int = 200
+    catalog_files: int = 32  # shared hot-catalog size
+    file_kb: int = 24
+    zipf_a: float = 1.2  # skew of both the user and the file popularity
+    storage_class: str | None = "archival"  # class the bench replays under
+    seed: int = 83
+
+
+def zipf_slo_trace(cfg: SLOTraceConfig) -> list[tuple]:
+    """Deterministic (put|get, user, payload) ops, multi_shard_trace style.
+
+    * ``("put", user, [(filename, blob)])`` -- first touch of a
+      (user, catalog file) pair
+    * ``("get", user, [filename])`` -- every repeat touch
+
+    Catalog file ``j``'s bytes depend only on ``(seed, j)``, never on
+    the user, so cross-user dedup (and therefore cache-hit sharing) is
+    structural, not accidental.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    catalog = []
+    for j in range(cfg.catalog_files):
+        r = np.random.default_rng(cfg.seed * 5_000_011 + j)
+        catalog.append(r.integers(0, 256, size=cfg.file_kb << 10,
+                                  dtype=np.int64).astype(np.uint8).tobytes())
+    seen: set[tuple[int, int]] = set()
+    ops: list[tuple] = []
+    for _ in range(cfg.n_ops):
+        uid = (int(rng.zipf(cfg.zipf_a)) - 1) % cfg.n_users
+        j = (int(rng.zipf(cfg.zipf_a)) - 1) % cfg.catalog_files
+        user = f"user{uid}"
+        fname = f"u{uid}/c{j}"
+        if (uid, j) not in seen:
+            seen.add((uid, j))
+            ops.append(("put", user, [(fname, catalog[j])]))
+        else:
+            ops.append(("get", user, [fname]))
+    return ops
+
+
 def request_trace(cfg: WorkloadConfig, events: list[FileEvent],
                   requests_per_user_day: int = 6) -> list[tuple[int, int, str, str]]:
     """Replayable retrieval trace: (day, hour, user, filename).

@@ -1,7 +1,7 @@
 """searslint — invariant static analysis for the SEARS storage core.
 
-Four passes (see each module's docstring): begin-purity, dispatch
-hygiene, counter coverage, plan determinism.  Run as
+Five passes (see each module's docstring): begin-purity, dispatch
+hygiene, counter coverage, plan determinism, cache discipline.  Run as
 
     python -m repro.lint src/ tests/ benchmarks/
 
@@ -14,11 +14,13 @@ from __future__ import annotations
 
 import pathlib
 
-from repro.lint import begin_purity, counters, determinism, dispatch
+from repro.lint import (begin_purity, cache_discipline, counters,
+                        determinism, dispatch)
 from repro.lint.core import (Finding, Module, Program, load_paths,
                              module_from_source, waiver_findings)
 
-ALL_PASSES = (begin_purity, dispatch, counters, determinism)
+ALL_PASSES = (begin_purity, dispatch, counters, determinism,
+              cache_discipline)
 
 __all__ = ["Finding", "Module", "Program", "ALL_PASSES", "load_paths",
            "module_from_source", "run_program", "run_paths"]

@@ -25,6 +25,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 
+from repro.core.cache import CacheConfig
 from repro.core.sanitizer import Sanitizer
 from repro.core.store import SEARSStore
 from repro.core.workload import ShardTraceConfig, multi_shard_trace
@@ -32,7 +33,7 @@ from repro.core.workload import ShardTraceConfig, multi_shard_trace
 __all__ = [
     "ShardTraceConfig", "multi_shard_trace", "build_store", "replay",
     "artifacts", "assert_identical", "assert_shard_balance",
-    "run_differential",
+    "run_differential", "run_cache_differential",
 ]
 
 
@@ -54,7 +55,8 @@ def _apply_lifecycle(store: SEARSStore, op: tuple) -> None:
 
 def replay(store: SEARSStore, ops: list[tuple], *,
            mode: str = "direct", pipeline: bool = False,
-           lifecycle: bool = True, flush_every: int = 4) -> list:
+           lifecycle: bool = True, flush_every: int = 4,
+           with_stats: bool = True) -> list:
     """Run a ``multi_shard_trace`` op list; return the observation log.
 
     ``mode="direct"`` drives the store API per op; ``mode="scheduler"``
@@ -63,9 +65,17 @@ def replay(store: SEARSStore, ops: list[tuple], *,
     before any lifecycle op, so add/drain always lands between flush
     windows of the *trace* (the in-window case has its own tests).
     Lifecycle ops are skipped when ``lifecycle`` is false — the 1-shard
-    baseline mode.
+    baseline mode.  ``with_stats=False`` logs only the blob digests —
+    the cache differential uses it, since hits legitimately change the
+    timing stats while the bytes must not move.
     """
     obs: list = []
+
+    def _observe(blob: bytes, st) -> None:
+        digest = hashlib.sha1(blob).hexdigest()
+        obs.append((digest, dataclasses.astuple(st)) if with_stats
+                   else digest)
+
     if mode == "direct":
         for op in ops:
             if op[0] in ("add_shard", "drain_shard"):
@@ -76,8 +86,7 @@ def replay(store: SEARSStore, ops: list[tuple], *,
                 store.put_files(op[1], op[2])
             elif op[0] == "get":
                 for blob, st in store.get_files(op[1], op[2]):
-                    obs.append((hashlib.sha1(blob).hexdigest(),
-                                dataclasses.astuple(st)))
+                    _observe(blob, st)
             else:
                 store.delete_file(op[1], op[2])
         return obs
@@ -93,8 +102,7 @@ def replay(store: SEARSStore, ops: list[tuple], *,
         while gets:
             fut = gets.pop(0)
             for blob, st in fut.result():
-                obs.append((hashlib.sha1(blob).hexdigest(),
-                            dataclasses.astuple(st)))
+                _observe(blob, st)
 
     since = 0
     for op in ops:
@@ -175,3 +183,40 @@ def run_differential(cfg: ShardTraceConfig, *, shards: int,
                      (subj_obs, artifacts(subj)))
     assert_shard_balance(subj)
     return artifacts(base), artifacts(subj)
+
+
+def run_cache_differential(cfg: ShardTraceConfig, *, shards: int = 1,
+                           engine: str = "numpy", mode: str = "direct",
+                           pipeline: bool = False,
+                           write_back: bool = True,
+                           capacity_bytes: int = 64 << 20
+                           ) -> tuple[dict, dict]:
+    """Cache-on vs cache-off byte identity on an *identical* topology.
+
+    Both sides replay the same trace (lifecycle ops included on both —
+    the cache must survive shard add/drain, not sidestep it); the
+    subject additionally runs a block cache, write-back by default, and
+    is flushed after the trace so every dirty chunk lands.  Timing
+    stats legitimately diverge (hits skip the retrieval model's rng
+    draws), so the per-get log compares blob digests only, and
+    ``StoreStats.cache`` is normalized out; everything else — returned
+    bytes, node piece digests, index records, listings, pool shape —
+    must match byte-for-byte.
+    """
+    ops = multi_shard_trace(cfg)
+    base = build_store(engine=engine, shards=shards)
+    base_obs = replay(base, ops, mode=mode, pipeline=pipeline,
+                      with_stats=False)
+    subj = build_store(engine=engine, shards=shards,
+                       cache=CacheConfig(capacity_bytes=capacity_bytes,
+                                         write_back=write_back))
+    subj_obs = replay(subj, ops, mode=mode, pipeline=pipeline,
+                      with_stats=False)
+    subj.flush()
+    base_art, subj_art = artifacts(base), artifacts(subj)
+    for art in (base_art, subj_art):
+        art["stats"] = dataclasses.replace(art["stats"], cache=None)
+    assert_identical((base_obs, base_art), (subj_obs, subj_art))
+    assert_shard_balance(subj)  # includes the sanitizer's cache ledger
+    assert subj.cache.dirty_count == 0, "flush left dirty chunks"
+    return base_art, subj_art

@@ -298,6 +298,97 @@ def scan(self, cluster_id, scope):
     assert not live(findings, "plan-determinism")
 
 
+# -------------------------------------------------- cache discipline ----
+
+def test_cache_unbounded_catches_evictionless_attr_cache():
+    findings = lint_sources({"src/repro/core/store.py": """
+class Store:
+    def __init__(self):
+        self._chunk_cache = {}
+
+    def get(self, cid):
+        if cid not in self._chunk_cache:
+            self._chunk_cache[cid] = self.decode(cid)
+        return self._chunk_cache[cid]
+"""})
+    hits = live(findings, "cache-unbounded")
+    assert hits and "_chunk_cache" in hits[0].message
+
+
+def test_cache_unbounded_catches_module_level_dict():
+    findings = lint_sources({"src/repro/core/helpers.py": """
+PLAN_CACHE: dict = {}
+
+def plan(key, fn):
+    if key not in PLAN_CACHE:
+        PLAN_CACHE[key] = fn()
+    return PLAN_CACHE[key]
+"""})
+    assert len(live(findings, "cache-unbounded")) == 1
+
+
+def test_cache_unbounded_allows_evicting_and_local_caches():
+    findings = lint_sources({"src/repro/core/store.py": """
+from collections import OrderedDict
+
+class Store:
+    def __init__(self):
+        self._blob_cache = OrderedDict()
+
+    def fill(self, cid, blob):
+        self._blob_cache[cid] = blob
+        while len(self._blob_cache) > 64:
+            self._blob_cache.popitem(last=False)
+
+    def plan(self, cids):
+        cached: dict = {}   # per-call local, dies with the request
+        for cid in cids:
+            cached[cid] = self.peek(cid)
+        return cached
+"""})
+    assert not live(findings, "cache-unbounded")
+
+
+def test_cache_unbounded_ignores_non_storage_modules():
+    findings = lint_sources({"src/repro/models/embed.py": """
+ACTIVATION_CACHE = {}
+"""})
+    assert not live(findings, "cache-unbounded")
+
+
+def test_cache_bypass_catches_direct_read_in_store():
+    findings = lint_sources({"src/repro/core/store.py": """
+def fetch(self, cluster, cids):
+    return cluster.read_pieces_batch(cids, cluster.k)
+"""})
+    hits = live(findings, "cache-bypass")
+    assert hits and "_read_cluster_pieces" in hits[0].message
+
+
+def test_cache_bypass_allows_funnel_and_repair_modules():
+    findings = lint_sources({
+        "src/repro/core/store.py": """
+def _read_cluster_pieces(self, cluster_id, chunk_ids):
+    cluster = self.clusters[cluster_id]
+    return cluster.read_pieces_batch(chunk_ids, cluster.k)
+""",
+        "src/repro/core/repair.py": """
+def drain(self, cluster, cid):
+    return cluster.read_pieces(cid, cluster.k)
+"""})
+    assert not live(findings, "cache-bypass")
+
+
+def test_cache_bypass_waiver_with_reason_is_honored():
+    findings = lint_sources({"src/repro/core/scheduler.py": """
+def rebuild(self, cluster, cid):
+    # searslint: ignore[cache-bypass] -- local rebuild, no time charged
+    return cluster.read_pieces(cid, cluster.k)
+"""})
+    assert not live(findings)
+    assert any(f.waived for f in findings)
+
+
 # ------------------------------------------------------------ waivers ----
 
 def test_waiver_with_reason_suppresses_finding():
